@@ -1,0 +1,79 @@
+"""Micro-benchmarks of the Pallas kernels vs their XLA/jnp references.
+
+On this CPU container the kernels execute in interpret mode, so absolute
+wall-times are NOT TPU-representative — what's meaningful here is (a) the
+oracle-vs-kernel numerical agreement (asserted) and (b) the XLA-reference
+wall-times as a CPU sanity signal.  The TPU roofline claims come from the
+dry-run (benchmarks/roofline.py), not from these timings.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops, ref
+
+
+def _time(fn, *args, n=3):
+    fn(*args)  # compile
+    t0 = time.time()
+    for _ in range(n):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.time() - t0) / n * 1e6
+
+
+def run(full=False):
+    key = jax.random.PRNGKey(0)
+    rows = []
+    f32 = jnp.float32  # pin f32: earlier benches may have enabled x64
+    # flash attention (XLA ref timing; kernel checked vs oracle)
+    B, S, H, hd = 2, 256, 4, 64
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, S, H, hd), f32)
+    k = jax.random.normal(ks[1], (B, S, H, hd), f32)
+    v = jax.random.normal(ks[2], (B, S, H, hd), f32)
+    ref_fn = jax.jit(lambda q, k, v: ref.attention(
+        jnp.moveaxis(q, 2, 1), jnp.moveaxis(k, 2, 1), jnp.moveaxis(v, 2, 1)))
+    us = _time(ref_fn, q, k, v)
+    out = ops.flash_attention(q, k, v)
+    want = jnp.moveaxis(ref_fn(q, k, v), 1, 2)
+    err = float(jnp.max(jnp.abs(out - want)))
+    rows.append(("kernel_flash_attention", us, f"max_err_vs_oracle={err:.1e}"))
+
+    # ssd scan
+    Bb, S2, H2, P, N = 1, 256, 4, 32, 16
+    ks = jax.random.split(key, 5)
+    x = jax.random.normal(ks[0], (Bb, S2, H2, P), f32)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (Bb, S2, H2), f32))
+    A = -jnp.exp(jax.random.normal(ks[2], (H2,), f32) * 0.5)
+    Bm = jax.random.normal(ks[3], (Bb, S2, N), f32) * 0.3
+    Cm = jax.random.normal(ks[4], (Bb, S2, N), f32) * 0.3
+    ref_fn = jax.jit(ref.ssd)
+    us = _time(ref_fn, x, dt, A, Bm, Cm)
+    y, h = ops.ssd_scan(x, dt, A, Bm, Cm, chunk=64)
+    yr, hr = ref_fn(x, dt, A, Bm, Cm)
+    err = float(jnp.max(jnp.abs(y - yr)))
+    rows.append(("kernel_ssd_scan", us, f"max_err_vs_oracle={err:.1e}"))
+
+    # gmm estep
+    rng = np.random.default_rng(0)
+    T, K, D = 2000, 3, 4
+    xg = jnp.asarray(rng.normal(size=(T, D)), jnp.float32)
+    mask = jnp.ones((T,), jnp.float32)
+    lp = jnp.asarray(rng.normal(size=K), jnp.float32)
+    Aw = rng.normal(size=(K, D, D)) * 0.3
+    Wn = jnp.asarray(np.einsum("kij,klj->kil", Aw, Aw) + np.eye(D),
+                     jnp.float32)
+    b = jnp.asarray(rng.normal(size=(K, D)), jnp.float32)
+    c = jnp.asarray(rng.uniform(1, 3, K), jnp.float32)
+    ref_fn = jax.jit(ref.gmm_estep)
+    us = _time(ref_fn, xg, mask, lp, Wn, b, c)
+    r, R, sx, sxx = ops.gmm_estep(xg, mask, lp, Wn, b, c)
+    rr = ref_fn(xg, mask, lp, Wn, b, c)
+    err = float(jnp.max(jnp.abs(r - rr[0])))
+    rows.append(("kernel_gmm_estep", us, f"max_err_vs_oracle={err:.1e}"))
+    return rows

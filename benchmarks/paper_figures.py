@@ -1,0 +1,246 @@
+"""One benchmark per paper figure/table (Sec. V).  Reduced-but-faithful
+settings by default (CPU budget); --full restores the paper's exact sizes.
+
+Each function returns rows of (name, us_per_call, derived-metric) and saves
+full curves to experiments/benchmarks/*.json for EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks import common
+from repro.core import algorithms
+from repro.data import datasets, synthetic
+
+K, D = 3, 2
+
+
+def _paper_data(full):
+    n_nodes = 50 if full else 20
+    n_per = 100 if full else 80
+    return synthetic.paper_synthetic(n_nodes=n_nodes, n_per_node=n_per,
+                                     seed=1), n_nodes
+
+
+def fig3_tau_sweep(full=False):
+    """Fig. 3: dSVB cost vs forgetting rate tau — optimum in [0.1, 0.3]."""
+    data, n = _paper_data(full)
+    s = common.setup_gmm(data, K, D, graph_seed=3)
+    n_iters = 2000 if full else 500
+    taus = [0.02, 0.05, 0.1, 0.2, 0.3, 0.5, 0.8]
+    rows, curve = [], {}
+    for tau in taus:
+        run, wall = common.timed(
+            algorithms.run_dsvb, data.x, data.mask, s["W"], s["prior"],
+            n_iters=n_iters, K=K, D=D, tau=tau, ref_phi=s["ref_phis"],
+            init_q=s["init_q"])
+        curve[tau] = {"kl_mean": float(run.kl_mean[-1]),
+                      "kl_std": float(run.kl_std[-1])}
+    cvb, _ = common.timed(algorithms.run_cvb, data.x, data.mask, s["prior"],
+                          n_iters=min(300, n_iters), K=K, D=D,
+                          ref_phi=s["ref_phis"], init_q=s["init_q"])
+    best_tau = min(curve, key=lambda t: curve[t]["kl_mean"])
+    common.save("fig3_tau_sweep", {"curve": curve, "n_iters": n_iters,
+                                   "cvb_kl": float(cvb.kl_mean[-1]),
+                                   "best_tau": best_tau})
+    rows.append(("fig3_tau_sweep", common.us_per_iter(wall, n_iters),
+                 f"best_tau={best_tau}"))
+    return rows
+
+
+def fig4_convergence(full=False):
+    """Fig. 4: dSVB converges to ~cVB; nsg-dVB biased."""
+    data, n = _paper_data(full)
+    s = common.setup_gmm(data, K, D, graph_seed=3)
+    n_iters = 3000 if full else 600
+    kw = dict(n_iters=n_iters, K=K, D=D, ref_phi=s["ref_phis"],
+              init_q=s["init_q"])
+    dsvb, wall = common.timed(algorithms.run_dsvb, data.x, data.mask,
+                              s["W"], s["prior"], tau=0.2, **kw)
+    cvb, _ = common.timed(algorithms.run_cvb, data.x, data.mask, s["prior"],
+                          **kw)
+    nsg, _ = common.timed(algorithms.run_nsg_dvb, data.x, data.mask, s["W"],
+                          s["prior"], **kw)
+    nonc, _ = common.timed(algorithms.run_noncoop, data.x, data.mask,
+                           s["prior"], **kw)
+    sub = slice(0, n_iters, max(1, n_iters // 200))
+    common.save("fig4_convergence", {
+        "iters": list(range(n_iters))[sub],
+        "dsvb": np.asarray(dsvb.kl_mean)[sub].tolist(),
+        "cvb": np.asarray(cvb.kl_mean)[sub].tolist(),
+        "nsg_dvb": np.asarray(nsg.kl_mean)[sub].tolist(),
+        "noncoop": np.asarray(nonc.kl_mean)[sub].tolist(),
+        "final": {"dsvb": float(dsvb.kl_mean[-1]),
+                  "cvb": float(cvb.kl_mean[-1]),
+                  "nsg_dvb": float(nsg.kl_mean[-1]),
+                  "noncoop": float(nonc.kl_mean[-1])}})
+    ratio = float(dsvb.kl_mean[-1]) / max(float(cvb.kl_mean[-1]), 1e-9)
+    return [("fig4_convergence", common.us_per_iter(wall, n_iters),
+             f"dsvb/cvb_kl_ratio={ratio:.2f}")]
+
+
+def fig7_rho_sweep(full=False):
+    """Fig. 7: small rho converges faster; too small risks leaving Omega."""
+    data, n = _paper_data(full)
+    s = common.setup_gmm(data, K, D, graph_seed=3)
+    n_iters = 1000 if full else 300
+    rhos = [0.25, 0.5, 1.0, 2.0, 8.0]
+    curve = {}
+    for rho in rhos:
+        run, wall = common.timed(
+            algorithms.run_dvb_admm, data.x, data.mask, s["adj"], s["prior"],
+            n_iters=n_iters, K=K, D=D, rho=rho, ref_phi=s["ref_phis"],
+            init_q=s["init_q"])
+        tr = np.asarray(run.kl_mean)
+        # iterations to reach 1.5x the final cVB-quality level
+        target = float(tr[-1]) * 1.5 + 0.5
+        t_hit = int(np.argmax(tr < target)) if np.any(tr < target) else -1
+        curve[rho] = {"kl_final": float(tr[-1]), "iters_to_1p5x": t_hit,
+                      "kl_std": float(run.kl_std[-1])}
+    common.save("fig7_rho_sweep", {"curve": curve, "n_iters": n_iters})
+    fastest = min(curve, key=lambda r: curve[r]["iters_to_1p5x"]
+                  if curve[r]["iters_to_1p5x"] >= 0 else 1e9)
+    return [("fig7_rho_sweep", common.us_per_iter(wall, n_iters),
+             f"fastest_rho={fastest}")]
+
+
+def fig8_admm_vs_dsvb(full=False):
+    """Fig. 8: dVB-ADMM converges ~5x faster than dSVB to the same KL."""
+    data, n = _paper_data(full)
+    s = common.setup_gmm(data, K, D, graph_seed=3)
+    n_iters = 1500 if full else 600
+    kw = dict(n_iters=n_iters, K=K, D=D, ref_phi=s["ref_phis"],
+              init_q=s["init_q"])
+    dsvb, _ = common.timed(algorithms.run_dsvb, data.x, data.mask, s["W"],
+                           s["prior"], tau=0.2, **kw)
+    admm, wall = common.timed(algorithms.run_dvb_admm, data.x, data.mask,
+                              s["adj"], s["prior"], rho=0.5, **kw)
+    a, d = np.asarray(admm.kl_mean), np.asarray(dsvb.kl_mean)
+    target = float(a[-1]) * 1.2 + 0.5
+    t_admm = int(np.argmax(a < target)) if np.any(a < target) else n_iters
+    t_dsvb = int(np.argmax(d < target)) if np.any(d < target) else n_iters
+    speedup = t_dsvb / max(t_admm, 1)
+    common.save("fig8_admm_vs_dsvb", {
+        "kl_admm_final": float(a[-1]), "kl_dsvb_final": float(d[-1]),
+        "iters_admm": t_admm, "iters_dsvb": t_dsvb, "speedup": speedup,
+        "std_admm": float(admm.kl_std[-1]), "std_dsvb": float(dsvb.kl_std[-1])})
+    return [("fig8_admm_vs_dsvb", common.us_per_iter(wall, n_iters),
+             f"admm_speedup={speedup:.1f}x")]
+
+
+def fig9_imbalance(full=False):
+    """Fig. 9: unequal per-node data sizes (40..160) — performance holds."""
+    n_nodes = 50 if full else 20
+    # paper Fig. 9: sizes 40..160, samples from the WHOLE mixture
+    data = synthetic.paper_synthetic(n_nodes=n_nodes, n_per_node=100,
+                                     seed=2, unequal_sizes=True,
+                                     imbalanced=False)
+    s = common.setup_gmm(data, K, D, graph_seed=4)
+    n_iters = 1500 if full else 500
+    kw = dict(n_iters=n_iters, K=K, D=D, ref_phi=s["ref_phis"],
+              init_q=s["init_q"])
+    cvb, _ = common.timed(algorithms.run_cvb, data.x, data.mask, s["prior"],
+                          **kw)
+    dsvb, _ = common.timed(algorithms.run_dsvb, data.x, data.mask, s["W"],
+                           s["prior"], tau=0.2, **kw)
+    admm, wall = common.timed(algorithms.run_dvb_admm, data.x, data.mask,
+                              s["adj"], s["prior"], rho=0.5, **kw)
+    common.save("fig9_imbalance", {
+        "cvb": float(cvb.kl_mean[-1]), "dsvb": float(dsvb.kl_mean[-1]),
+        "admm": float(admm.kl_mean[-1])})
+    ratio = float(admm.kl_mean[-1]) / max(float(cvb.kl_mean[-1]), 1e-9)
+    return [("fig9_imbalance", common.us_per_iter(wall, n_iters),
+             f"admm/cvb_kl_ratio={ratio:.2f}")]
+
+
+def fig10_network_size(full=False):
+    """Fig. 10: N=30/80/100 (reduced: 15/30/45) — converges at any size,
+    more slowly for larger networks."""
+    sizes = [30, 80, 100] if full else [15, 30, 45]
+    n_iters = 2000 if full else 600
+    out = {}
+    for n in sizes:
+        data = synthetic.paper_synthetic(n_nodes=n, n_per_node=60, seed=3)
+        s = common.setup_gmm(data, K, D, graph_seed=5)
+        run, wall = common.timed(
+            algorithms.run_dvb_admm, data.x, data.mask, s["adj"], s["prior"],
+            n_iters=n_iters, K=K, D=D, rho=0.5, ref_phi=s["ref_phis"],
+            init_q=s["init_q"])
+        tr = np.asarray(run.kl_mean)
+        target = float(tr[-1]) * 1.5 + 0.5
+        out[n] = {"kl_final": float(tr[-1]),
+                  "iters_to_1p5x": int(np.argmax(tr < target))}
+    common.save("fig10_network_size", out)
+    return [("fig10_network_size", common.us_per_iter(wall, n_iters),
+             "iters_to_conv=" + "/".join(
+                 str(out[n]["iters_to_1p5x"]) for n in sizes))]
+
+
+def _clustering_table(name, data, Kc, Dc, n_iters, rho, tau, graph_seed):
+    s = common.setup_gmm(data, Kc, Dc, graph_seed=graph_seed, beta0=0.05,
+                         w0=5.0)
+    kw = dict(n_iters=n_iters, K=Kc, D=Dc, init_q=s["init_q"])
+    results, wall = {}, 0.0
+    cvb, w = common.timed(algorithms.run_cvb, data.x, data.mask, s["prior"],
+                          **kw)
+    results["cvb"] = common.accuracy(data, cvb.phi, Kc, Dc)
+    nonc, _ = common.timed(algorithms.run_noncoop, data.x, data.mask,
+                           s["prior"], **kw)
+    results["noncoop"] = common.accuracy(data, nonc.phi, Kc, Dc)
+    nsg, _ = common.timed(algorithms.run_nsg_dvb, data.x, data.mask, s["W"],
+                          s["prior"], **kw)
+    results["nsg_dvb"] = common.accuracy(data, nsg.phi, Kc, Dc)
+    dsvb, _ = common.timed(algorithms.run_dsvb, data.x, data.mask, s["W"],
+                           s["prior"], tau=tau, **kw)
+    results["dsvb"] = common.accuracy(data, dsvb.phi, Kc, Dc)
+    admm, wall = common.timed(algorithms.run_dvb_admm, data.x, data.mask,
+                              s["adj"], s["prior"], rho=rho, **kw)
+    results["dvb_admm"] = common.accuracy(data, admm.phi, Kc, Dc)
+    common.save(name, results)
+    return results, wall, n_iters
+
+
+def table1_atmosphere(full=False):
+    """Table I: atmosphere surrogate (1600 x 3, 2 classes, 20 nodes)."""
+    data = datasets.atmosphere_surrogate(n_nodes=20, seed=0)
+    res, wall, n_iters = _clustering_table(
+        "table1_atmosphere", data, 2, 3, 400 if not full else 1000,
+        rho=1.0, tau=0.2, graph_seed=11)
+    return [("table1_atmosphere", common.us_per_iter(wall, n_iters),
+             f"acc cvb={res['cvb']:.3f} admm={res['dvb_admm']:.3f} "
+             f"dsvb={res['dsvb']:.3f} nsg={res['nsg_dvb']:.3f} "
+             f"noncoop={res['noncoop']:.3f}")]
+
+
+def table2_ionosphere(full=False):
+    """Table II: ionosphere surrogate (340 x 34, 2 classes, 20 nodes)."""
+    data = datasets.ionosphere_surrogate(n_nodes=20, seed=0)
+    res, wall, n_iters = _clustering_table(
+        "table2_ionosphere", data, 2, 34, 300 if not full else 800,
+        rho=16.0, tau=0.2, graph_seed=12)
+    return [("table2_ionosphere", common.us_per_iter(wall, n_iters),
+             f"acc cvb={res['cvb']:.3f} admm={res['dvb_admm']:.3f} "
+             f"dsvb={res['dsvb']:.3f} nsg={res['nsg_dvb']:.3f} "
+             f"noncoop={res['noncoop']:.3f}")]
+
+
+def fig13_coil20(full=False):
+    """Fig. 13: accuracy vs number of clusters K on the COIL-20 surrogate."""
+    Ks = list(range(2, 11, 2)) if full else [2, 4, 6]
+    out = {}
+    for Kc in Ks:
+        data = datasets.coil20_surrogate(Kc, n_nodes=10, seed=Kc)
+        res, wall, n_iters = _clustering_table(
+            f"fig13_coil20_K{Kc}", data, Kc, 52,
+            250 if not full else 600, rho=16.0, tau=0.2, graph_seed=13)
+        out[Kc] = res
+    common.save("fig13_coil20", out)
+    last = out[Ks[-1]]
+    return [("fig13_coil20", common.us_per_iter(wall, n_iters),
+             f"K={Ks[-1]} acc admm={last['dvb_admm']:.3f} "
+             f"cvb={last['cvb']:.3f} noncoop={last['noncoop']:.3f}")]
+
+
+ALL = [fig3_tau_sweep, fig4_convergence, fig7_rho_sweep, fig8_admm_vs_dsvb,
+       fig9_imbalance, fig10_network_size, table1_atmosphere,
+       table2_ionosphere, fig13_coil20]

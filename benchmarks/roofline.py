@@ -1,0 +1,62 @@
+"""Aggregate the dry-run JSON reports into the §Roofline table."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+HERE = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DRYRUN_DIR = os.path.join(HERE, "experiments", "dryrun")
+
+
+def load_reports(pattern: str = "*.json") -> list[dict]:
+    out = []
+    for p in sorted(glob.glob(os.path.join(DRYRUN_DIR, pattern))):
+        with open(p) as f:
+            out.append(json.load(f))
+    return out
+
+
+def table(reports=None, mesh: str = "16x16", dp_mode: str = "allreduce",
+          kernels=False) -> str:
+    reports = reports or load_reports()
+    rows = [r for r in reports if r["mesh"] == mesh
+            and r["dp_mode"] == dp_mode and r.get("use_kernels", False) ==
+            kernels]
+    hdr = (f"{'arch':24s} {'shape':12s} {'Tc_ms':>9s} {'Tm_ms':>9s} "
+           f"{'Tcoll_ms':>9s} {'bound':>10s} {'useful':>6s} "
+           f"{'args_GiB':>8s} {'temp_GiB':>8s}")
+    lines = [hdr, "-" * len(hdr)]
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"])):
+        ma = r.get("memory_analysis", {})
+        lines.append(
+            f"{r['arch']:24s} {r['shape']:12s} "
+            f"{r['t_compute_s']*1e3:9.2f} {r['t_memory_s']*1e3:9.2f} "
+            f"{r['t_collective_s']*1e3:9.2f} {r['bottleneck']:>10s} "
+            f"{r['useful_flops_ratio']:6.2f} "
+            f"{(ma.get('argument_size_in_bytes') or 0)/2**30:8.2f} "
+            f"{(ma.get('temp_size_in_bytes') or 0)/2**30:8.2f}")
+    return "\n".join(lines)
+
+
+def run(full=False):
+    reports = load_reports()
+    if not reports:
+        return [("roofline", 0.0, "no dryrun reports — run "
+                 "`python -m repro.launch.dryrun --arch all --shape all "
+                 "--both_meshes` first")]
+    n16 = sum(r["mesh"] == "16x16" for r in reports)
+    n512 = sum(r["mesh"] == "2x16x16" for r in reports)
+    bounds = {}
+    for r in reports:
+        if r["mesh"] == "16x16" and r["dp_mode"] == "allreduce":
+            bounds[r["bottleneck"]] = bounds.get(r["bottleneck"], 0) + 1
+    print(table(reports))
+    return [("roofline", 0.0,
+             f"baselines 16x16={n16} 2x16x16={n512} bound:{bounds}")]
+
+
+if __name__ == "__main__":
+    print(table())
+    print()
+    print(table(mesh="2x16x16"))

@@ -1,0 +1,48 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.  ``--full`` restores the
+paper's exact experiment sizes (50 nodes, 2000-3000 iterations, 300 MC
+trials are NOT replicated — see DESIGN.md §7); default settings are
+reduced-but-faithful for the CPU container.
+"""
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated benchmark-name prefixes")
+    args, _ = ap.parse_known_args()
+
+    from benchmarks import consensus_bench, kernel_bench, linreg_bench, \
+        paper_figures, roofline, weights_ablation
+    benches = ([(f.__name__, f) for f in paper_figures.ALL]
+               + [("weights_ablation", weights_ablation.run),
+                  ("linreg_generality", linreg_bench.run),
+                  ("kernel_bench", kernel_bench.run),
+                  ("consensus_lm", consensus_bench.run),
+                  ("roofline", roofline.run)])
+    if args.only:
+        pre = tuple(args.only.split(","))
+        benches = [b for b in benches if b[0].startswith(pre)]
+
+    print("name,us_per_call,derived")
+    failed = 0
+    for bname, bench in benches:
+        try:
+            for name, us, derived in bench(full=args.full):
+                print(f"{name},{us:.1f},{derived}")
+                sys.stdout.flush()
+        except Exception:
+            failed += 1
+            print(f"{bname},nan,FAILED")
+            traceback.print_exc()
+    if failed:
+        raise SystemExit(1)
+
+
+if __name__ == '__main__':
+    main()

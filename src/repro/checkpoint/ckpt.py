@@ -1,0 +1,82 @@
+"""Minimal pytree checkpointing (orbax is unavailable offline).
+
+Flattens a pytree by key-path into a compressed .npz plus a tiny structure
+manifest; restores exactly (dtypes preserved, bf16 via uint16 view).
+Atomic write (tmp + rename) so a crashed save never corrupts the latest
+checkpoint.  Step-numbered files with `latest_step` discovery.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_BF16 = "bfloat16"
+
+
+def _flatten(tree):
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for path, leaf in flat:
+        key = jax.tree_util.keystr(path)
+        out[key] = np.asarray(leaf)
+    return out
+
+
+def save(path: str, tree, step: int | None = None) -> str:
+    if step is not None:
+        path = os.path.join(path, f"ckpt_{step:08d}.npz")
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    flat = _flatten(tree)
+    arrays, meta = {}, {}
+    for i, (key, arr) in enumerate(sorted(flat.items())):
+        name = f"a{i}"
+        if arr.dtype == jnp.bfloat16:
+            arrays[name] = arr.view(np.uint16)
+            meta[key] = {"name": name, "dtype": _BF16}
+        else:
+            arrays[name] = arr
+            meta[key] = {"name": name, "dtype": str(arr.dtype)}
+    tmp = path + ".tmp"
+    np.savez_compressed(tmp, __meta__=np.frombuffer(
+        json.dumps(meta).encode(), np.uint8), **arrays)
+    os.replace(tmp + ".npz" if not tmp.endswith(".npz") else tmp, path)
+    return path
+
+
+def restore(path: str, tree_like, step: int | None = None):
+    """Restore into the structure of `tree_like` (shapes must match)."""
+    if step is not None:
+        path = os.path.join(path, f"ckpt_{step:08d}.npz")
+    with np.load(path) as z:
+        meta = json.loads(bytes(z["__meta__"]).decode())
+        flat = {}
+        for key, info in meta.items():
+            arr = z[info["name"]]
+            if info["dtype"] == _BF16:
+                arr = arr.view(jnp.bfloat16)
+            flat[key] = arr
+
+    paths, treedef = jax.tree_util.tree_flatten_with_path(tree_like)
+    leaves = []
+    for path_k, leaf in paths:
+        key = jax.tree_util.keystr(path_k)
+        if key not in flat:
+            raise KeyError(f"checkpoint missing {key}")
+        arr = flat[key]
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(f"{key}: shape {arr.shape} != {leaf.shape}")
+        leaves.append(jnp.asarray(arr))
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def latest_step(ckpt_dir: str) -> int | None:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [int(m.group(1)) for f in os.listdir(ckpt_dir)
+             if (m := re.match(r"ckpt_(\d+)\.npz$", f))]
+    return max(steps) if steps else None

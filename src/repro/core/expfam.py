@@ -1,0 +1,271 @@
+"""Exponential-family machinery for the conjugate-exponential VB framework.
+
+The paper (Hua & Li, Eq. 7-11) optimises variational posteriors directly in
+the *natural-parameter space* of a conjugate-exponential model.  This module
+implements that space for the two families the Bayesian GMM needs:
+
+* Dirichlet over mixing coefficients       pi ~ Dir(alpha)
+* Normal-Wishart over (mu_k, Lambda_k)     (mu, L) ~ NW(m, beta, W, nu)
+
+plus the flat packing/unpacking used as the *message* exchanged between nodes
+(Eq. 45): phi_theta = [phi_pi, phi_{mu_1,L_1}, ..., phi_{mu_K,L_K}].
+
+Layout of the flat natural-parameter vector for K components in D dims::
+
+    [ alpha-1 (K) | per-component blocks (K * (2 + D + D*D)) ]
+    block_k = [ n1, n4, n3 (D), vec(n2) (D*D) ]
+      n1 = (nu - D) / 2
+      n2 = -1/2 W^{-1} - beta/2 m m^T        (symmetric, stored dense)
+      n3 = beta m
+      n4 = -beta / 2
+
+All functions are pure jnp and vectorise over arbitrary leading axes of the
+hyperparameter pytrees (we use a leading K axis, and algorithms add a leading
+node axis on the flat vectors).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.scipy.special import digamma, gammaln, multigammaln
+
+
+def enable_x64() -> None:
+    """Faithful-layer entry points call this: the GMM VB recursions involve
+    log-determinants and digammas of counts ~1e4; float64 keeps the KL metric
+    (Eq. 46) trustworthy.  The framework layer never calls it."""
+    jax.config.update("jax_enable_x64", True)
+
+
+# ---------------------------------------------------------------------------
+# Hyperparameter container for the GMM global posterior q(pi) prod_k q(mu,L)
+# ---------------------------------------------------------------------------
+class GMMPosterior(NamedTuple):
+    """Hyperparameters of Dir(alpha) x prod_k NW(m, beta, W, nu)."""
+
+    alpha: jnp.ndarray  # (K,)
+    m: jnp.ndarray      # (K, D)
+    beta: jnp.ndarray   # (K,)
+    W: jnp.ndarray      # (K, D, D)  Wishart scale matrix
+    nu: jnp.ndarray     # (K,)       Wishart dof
+
+    @property
+    def K(self) -> int:
+        return self.alpha.shape[-1]
+
+    @property
+    def D(self) -> int:
+        return self.m.shape[-1]
+
+
+def noninformative_prior(K: int, D: int, *, alpha0: float = 1.0,
+                         beta0: float = 1.0, nu0: float | None = None,
+                         w0_scale: float = 1.0, m0: jnp.ndarray | None = None,
+                         dtype=jnp.float64) -> GMMPosterior:
+    """Broad conjugate prior (paper Sec. V: 'non-informative priors')."""
+    if nu0 is None:
+        nu0 = float(D)
+    if m0 is None:
+        m0 = jnp.zeros((D,), dtype)
+    return GMMPosterior(
+        alpha=jnp.full((K,), alpha0, dtype),
+        m=jnp.broadcast_to(m0.astype(dtype), (K, D)),
+        beta=jnp.full((K,), beta0, dtype),
+        W=jnp.broadcast_to(jnp.eye(D, dtype=dtype) * w0_scale, (K, D, D)),
+        nu=jnp.full((K,), nu0, dtype),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Natural parameters <-> hyperparameters  (Eq. 45 + Appendix B)
+# ---------------------------------------------------------------------------
+def flat_dim(K: int, D: int) -> int:
+    return K + K * (2 + D + D * D)
+
+
+def pack_natural(q: GMMPosterior) -> jnp.ndarray:
+    """GMMPosterior -> flat natural-parameter message (Eq. 45)."""
+    K, D = q.K, q.D
+    n1 = (q.nu - D) / 2.0                                            # (K,)
+    n4 = -q.beta / 2.0                                               # (K,)
+    n3 = q.beta[:, None] * q.m                                       # (K, D)
+    W_inv = jnp.linalg.inv(q.W)                                      # (K, D, D)
+    mmT = q.m[:, :, None] * q.m[:, None, :]
+    n2 = -0.5 * W_inv - 0.5 * q.beta[:, None, None] * mmT            # (K, D, D)
+    blocks = jnp.concatenate(
+        [n1[:, None], n4[:, None], n3, n2.reshape(K, D * D)], axis=-1)
+    return jnp.concatenate([q.alpha - 1.0, blocks.reshape(-1)])
+
+
+def unpack_natural(phi: jnp.ndarray, K: int, D: int) -> GMMPosterior:
+    """Flat natural-parameter message -> GMMPosterior (inverse of pack)."""
+    alpha = phi[:K] + 1.0
+    blocks = phi[K:].reshape(K, 2 + D + D * D)
+    n1 = blocks[:, 0]
+    n4 = blocks[:, 1]
+    n3 = blocks[:, 2:2 + D]
+    n2 = blocks[:, 2 + D:].reshape(K, D, D)
+    beta = -2.0 * n4
+    m = n3 / beta[:, None]
+    nu = 2.0 * n1 + D
+    mmT = m[:, :, None] * m[:, None, :]
+    W_inv = -2.0 * n2 - beta[:, None, None] * mmT
+    W = jnp.linalg.inv(W_inv)
+    return GMMPosterior(alpha=alpha, m=m, beta=beta, W=W, nu=nu)
+
+
+def project_to_domain(phi: jnp.ndarray, K: int, D: int, *,
+                      min_alpha: float = 1e-3, min_beta: float = 1e-6,
+                      min_eig: float = 1e-8) -> jnp.ndarray:
+    """Euclidean projection of a natural-parameter point onto (the interior
+    of) the domain Omega (Eq. 38b).
+
+    Omega requires alpha_k > 0, beta_k > 0, nu_k > D - 1 and W^{-1} > 0.
+    We clamp the scalar coordinates and project the W^{-1} block onto the
+    PSD cone by eigenvalue clipping -- the closest point in Frobenius norm.
+    """
+    alpha = jnp.maximum(phi[:K] + 1.0, min_alpha)
+    blocks = phi[K:].reshape(K, 2 + D + D * D)
+    n1 = blocks[:, 0]
+    n4 = jnp.minimum(blocks[:, 1], -min_beta / 2.0)   # beta >= min_beta
+    n3 = blocks[:, 2:2 + D]
+    n2 = blocks[:, 2 + D:].reshape(K, D, D)
+    beta = -2.0 * n4
+    m = n3 / beta[:, None]
+    nu = jnp.maximum(2.0 * n1 + D, (D - 1.0) + 1e-3)
+    n1 = (nu - D) / 2.0
+    mmT = m[:, :, None] * m[:, None, :]
+    W_inv = -2.0 * n2 - beta[:, None, None] * mmT
+    W_inv = 0.5 * (W_inv + jnp.swapaxes(W_inv, -1, -2))
+    eigval, eigvec = jnp.linalg.eigh(W_inv)
+    # relative floor: reconstruction error of eigh scales with ||W^-1||, so
+    # an absolute 1e-8 floor would not survive the round trip at large norms
+    floor = jnp.maximum(min_eig,
+                        1e-10 * jnp.max(jnp.abs(eigval), -1, keepdims=True))
+    eigval = jnp.maximum(eigval, floor)
+    W_inv = jnp.einsum("kij,kj,klj->kil", eigvec, eigval, eigvec)
+    n2 = -0.5 * W_inv - 0.5 * beta[:, None, None] * mmT
+    blocks = jnp.concatenate(
+        [n1[:, None], n4[:, None], n3, n2.reshape(K, D * D)], axis=-1)
+    return jnp.concatenate([alpha - 1.0, blocks.reshape(-1)])
+
+
+def in_domain(phi: jnp.ndarray, K: int, D: int) -> jnp.ndarray:
+    """Boolean: does phi lie in the natural-parameter domain Omega (Eq. 8)?"""
+    q = unpack_natural(phi, K, D)
+    W_inv = jnp.linalg.inv(q.W)  # round-trips the packed -2 n2 - beta mm^T
+    # Use eigenvalues of the W^{-1} implied by the raw coordinates.
+    blocks = phi[K:].reshape(K, 2 + D + D * D)
+    n2 = blocks[:, 2 + D:].reshape(K, D, D)
+    beta = -2.0 * blocks[:, 1]
+    m = blocks[:, 2:2 + D] / beta[:, None]
+    W_inv = -2.0 * n2 - beta[:, None, None] * (m[:, :, None] * m[:, None, :])
+    eigs = jnp.linalg.eigvalsh(0.5 * (W_inv + jnp.swapaxes(W_inv, -1, -2)))
+    ok = (
+        jnp.all(q.alpha > 0)
+        & jnp.all(q.beta > 0)
+        & jnp.all(q.nu > q.D - 1)
+        & jnp.all(eigs > 0)
+    )
+    return ok
+
+
+# ---------------------------------------------------------------------------
+# Log-partition functions A(phi) and expected sufficient statistics (Eq. 10a)
+# ---------------------------------------------------------------------------
+def dirichlet_log_partition(alpha: jnp.ndarray) -> jnp.ndarray:
+    return jnp.sum(gammaln(alpha), -1) - gammaln(jnp.sum(alpha, -1))
+
+
+def dirichlet_expected_log(alpha: jnp.ndarray) -> jnp.ndarray:
+    """E[ln pi_k] = psi(alpha_k) - psi(sum alpha)."""
+    return digamma(alpha) - digamma(jnp.sum(alpha, -1, keepdims=True))
+
+
+def wishart_expected_logdet(W: jnp.ndarray, nu: jnp.ndarray) -> jnp.ndarray:
+    """E[ln |Lambda|] for Lambda ~ W(W, nu)  (Appendix A)."""
+    D = W.shape[-1]
+    j = jnp.arange(1, D + 1, dtype=W.dtype)
+    return (jnp.sum(digamma((nu[..., None] + 1.0 - j) / 2.0), -1)
+            + D * jnp.log(2.0) + jnp.linalg.slogdet(W)[1])
+
+
+def nw_log_partition(q: GMMPosterior) -> jnp.ndarray:
+    """A(phi_k) for each Normal-Wishart component (Appendix B), shape (K,)."""
+    D = q.D
+    return (-D / 2.0 * jnp.log(q.beta)
+            + q.nu / 2.0 * jnp.linalg.slogdet(q.W)[1]
+            + q.nu * D / 2.0 * jnp.log(2.0)
+            + multigammaln(q.nu / 2.0, D))
+
+
+def nw_expected_stats(q: GMMPosterior):
+    """E[u] = (E[ln|L|], E[L], E[L mu], E[mu^T L mu]) per component."""
+    e_logdet = wishart_expected_logdet(q.W, q.nu)                  # (K,)
+    e_L = q.nu[:, None, None] * q.W                                # (K, D, D)
+    e_Lmu = jnp.einsum("kij,kj->ki", e_L, q.m)                     # (K, D)
+    e_quad = q.D / q.beta + jnp.einsum("ki,kij,kj->k", q.m, e_L, q.m)
+    return e_logdet, e_L, e_Lmu, e_quad
+
+
+def gmm_log_partition(q: GMMPosterior) -> jnp.ndarray:
+    """A(phi) of the joint Dir x prod NW global distribution (scalar)."""
+    return dirichlet_log_partition(q.alpha) + jnp.sum(nw_log_partition(q))
+
+
+def expected_sufficient_stats(q: GMMPosterior) -> jnp.ndarray:
+    """grad_phi A(phi) laid out exactly like the flat packing.
+
+    By Eq. 10a this is E[u(z)]; verified against jax.grad of the packed
+    log-partition in the test-suite (a strong invariant of the packing).
+    """
+    K, D = q.K, q.D
+    e_logpi = dirichlet_expected_log(q.alpha)                      # (K,)
+    e_logdet, e_L, e_Lmu, e_quad = nw_expected_stats(q)
+    blocks = jnp.concatenate(
+        [e_logdet[:, None], e_quad[:, None], e_Lmu, e_L.reshape(K, D * D)],
+        axis=-1)
+    return jnp.concatenate([e_logpi, blocks.reshape(-1)])
+
+
+# ---------------------------------------------------------------------------
+# KL divergences (Appendix B) -- the paper's performance metric (Eq. 46)
+# ---------------------------------------------------------------------------
+def dirichlet_kl(alpha: jnp.ndarray, alpha_hat: jnp.ndarray) -> jnp.ndarray:
+    e_logpi = dirichlet_expected_log(alpha)
+    return (jnp.sum((alpha - alpha_hat) * e_logpi)
+            - dirichlet_log_partition(alpha)
+            + dirichlet_log_partition(alpha_hat))
+
+
+def nw_kl(q: GMMPosterior, p: GMMPosterior) -> jnp.ndarray:
+    """sum_k KL(NW(q_k) || NW(p_k)) via the exp-family identity
+    KL = (phi_q - phi_p)^T E_q[u] - A(phi_q) + A(phi_p)."""
+    def nat(qq: GMMPosterior):
+        n1 = (qq.nu - qq.D) / 2.0
+        W_inv = jnp.linalg.inv(qq.W)
+        mmT = qq.m[:, :, None] * qq.m[:, None, :]
+        n2 = -0.5 * W_inv - 0.5 * qq.beta[:, None, None] * mmT
+        n3 = qq.beta[:, None] * qq.m
+        n4 = -qq.beta / 2.0
+        return n1, n2, n3, n4
+
+    q1, q2, q3, q4 = nat(q)
+    p1, p2, p3, p4 = nat(p)
+    e_logdet, e_L, e_Lmu, e_quad = nw_expected_stats(q)
+    inner = ((q1 - p1) * e_logdet
+             + jnp.einsum("kij,kij->k", q2 - p2, e_L)
+             + jnp.einsum("ki,ki->k", q3 - p3, e_Lmu)
+             + (q4 - p4) * e_quad)
+    return jnp.sum(inner - nw_log_partition(q) + nw_log_partition(p))
+
+
+def gmm_kl(q: GMMPosterior, p: GMMPosterior) -> jnp.ndarray:
+    """d(phi, phi_hat) of Eq. 46: KL(Q(theta|phi) || P(theta|phi_hat))."""
+    return dirichlet_kl(q.alpha, p.alpha) + nw_kl(q, p)
+
+
+def gmm_kl_flat(phi: jnp.ndarray, phi_hat: jnp.ndarray, K: int, D: int):
+    return gmm_kl(unpack_natural(phi, K, D), unpack_natural(phi_hat, K, D))

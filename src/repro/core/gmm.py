@@ -1,0 +1,144 @@
+"""Bayesian Gaussian-mixture model — the paper's application (Sec. IV + App. A).
+
+Each node i holds data x_i of shape (Ni, D).  The local generative model uses
+the *replicated* likelihood P({x_i}_N | ...) = prod_j prod_k N(x | mu, L)^(N y),
+so every local count is scaled by the network size N (Appendix A: R_ik =
+N * sum_j r_ijk, etc.).
+
+`vbe_step` computes responsibilities given the current global posterior and
+returns the *local optimum* natural parameters phi*_{theta,i} (Eq. 18) — i.e.
+the hyperparameter update of Appendix A packed via expfam.pack_natural.  The
+five algorithms in core/algorithms.py differ only in what they do with the
+stack {phi*_i}.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import expfam
+from repro.core.expfam import GMMPosterior
+
+
+class SuffStats(NamedTuple):
+    """Replicated sufficient statistics of Appendix A (per component)."""
+
+    R: jnp.ndarray       # (K,)        R_k   = N * sum_j r_jk
+    sum_x: jnp.ndarray   # (K, D)      N * sum_j r_jk x_j       (= R_k xbar_k)
+    sum_xx: jnp.ndarray  # (K, D, D)   N * sum_j r_jk x_j x_j^T
+
+
+def responsibilities(x: jnp.ndarray, q: GMMPosterior,
+                     mask: jnp.ndarray | None = None) -> jnp.ndarray:
+    """r_jk (Bishop 10.46 / Appendix A), shape (Ni, K).
+
+    ln rho_jk = E[ln pi_k] + 1/2 E[ln|L_k|] - D/2 ln 2pi
+                - 1/2 E[(x_j - mu_k)^T L_k (x_j - mu_k)]
+    """
+    D = x.shape[-1]
+    e_logpi = expfam.dirichlet_expected_log(q.alpha)              # (K,)
+    e_logdet = expfam.wishart_expected_logdet(q.W, q.nu)          # (K,)
+    diff = x[:, None, :] - q.m[None, :, :]                        # (Ni, K, D)
+    maha = jnp.einsum("jki,kil,jkl->jk", diff, q.W, diff)         # (Ni, K)
+    e_quad = D / q.beta[None, :] + q.nu[None, :] * maha
+    log_rho = (e_logpi[None, :] + 0.5 * e_logdet[None, :]
+               - 0.5 * D * jnp.log(2.0 * jnp.pi) - 0.5 * e_quad)
+    r = jax.nn.softmax(log_rho, axis=-1)
+    if mask is not None:
+        r = r * mask[:, None]
+    return r
+
+
+def sufficient_stats(x: jnp.ndarray, r: jnp.ndarray,
+                     replication: float) -> SuffStats:
+    """Replicated stats (Appendix A).  `replication` is the network size N."""
+    R = replication * jnp.sum(r, axis=0)                          # (K,)
+    sum_x = replication * jnp.einsum("jk,jd->kd", r, x)           # (K, D)
+    sum_xx = replication * jnp.einsum("jk,jd,je->kde", r, x, x)   # (K, D, D)
+    return SuffStats(R=R, sum_x=sum_x, sum_xx=sum_xx)
+
+
+def posterior_from_stats(stats: SuffStats, prior: GMMPosterior,
+                         eps: float = 1e-12) -> GMMPosterior:
+    """Hyperparameter updates of Appendix A given (replicated) stats."""
+    R = stats.R
+    alpha = prior.alpha + R
+    beta = prior.beta + R
+    nu = prior.nu + R
+    xbar = stats.sum_x / (R[:, None] + eps)                       # (K, D)
+    m = (prior.beta[:, None] * prior.m + stats.sum_x) / beta[:, None]
+    # R*S = sum_xx - R xbar xbar^T ;  prior cross term beta0 R/(beta0+R)(..)
+    RS = stats.sum_xx - R[:, None, None] * (xbar[:, :, None] * xbar[:, None, :])
+    diff = xbar - prior.m
+    cross = (prior.beta * R / (prior.beta + R))[:, None, None] * (
+        diff[:, :, None] * diff[:, None, :])
+    W0_inv = jnp.linalg.inv(prior.W)
+    W_inv = W0_inv + RS + cross
+    W_inv = 0.5 * (W_inv + jnp.swapaxes(W_inv, -1, -2))
+    W = jnp.linalg.inv(W_inv)
+    return GMMPosterior(alpha=alpha, m=m, beta=beta, W=W, nu=nu)
+
+
+def local_vbm_optimum(x: jnp.ndarray, q_global: GMMPosterior,
+                      prior: GMMPosterior, replication: float,
+                      mask: jnp.ndarray | None = None) -> jnp.ndarray:
+    """One VBE step + local VBM optimum -> phi*_{theta,i}  (Eqs. 17a, 18).
+
+    Returns the flat natural-parameter message of Eq. 45.
+    """
+    r = responsibilities(x, q_global, mask)
+    stats = sufficient_stats(x, r, replication)
+    q_star = posterior_from_stats(stats, prior)
+    return expfam.pack_natural(q_star)
+
+
+# vmapped over a leading node axis: x (Nnodes, Ni, D), phi (Nnodes, P)
+def local_vbm_optimum_nodes(x: jnp.ndarray, phi: jnp.ndarray,
+                            prior: GMMPosterior, replication: float,
+                            K: int, D: int,
+                            mask: jnp.ndarray | None = None) -> jnp.ndarray:
+    def one(xi, phii, mi):
+        q = expfam.unpack_natural(phii, K, D)
+        return local_vbm_optimum(xi, q, prior, replication, mi)
+
+    if mask is None:
+        mask = jnp.ones(x.shape[:2], x.dtype)
+    return jax.vmap(one)(x, phi, mask)
+
+
+def elbo(x: jnp.ndarray, q: GMMPosterior, prior: GMMPosterior,
+         replication: float = 1.0) -> jnp.ndarray:
+    """Local variational lower bound L_i (Eq. 15) up to y-entropy terms.
+
+    Used for monitoring / tests (monotonicity of centralised VB), not inside
+    the algorithms themselves.
+    """
+    r = responsibilities(x, q)
+    D = x.shape[-1]
+    e_logpi = expfam.dirichlet_expected_log(q.alpha)
+    e_logdet = expfam.wishart_expected_logdet(q.W, q.nu)
+    diff = x[:, None, :] - q.m[None, :, :]
+    maha = jnp.einsum("jki,kil,jkl->jk", diff, q.W, diff)
+    e_quad = D / q.beta[None, :] + q.nu[None, :] * maha
+    log_rho = (e_logpi[None, :] + 0.5 * e_logdet[None, :]
+               - 0.5 * D * jnp.log(2.0 * jnp.pi) - 0.5 * e_quad)
+    e_loglik = replication * jnp.sum(r * log_rho)
+    ent_y = -replication * jnp.sum(r * jnp.log(r + 1e-30))
+    kl_theta = expfam.gmm_kl(q, prior)
+    return e_loglik + ent_y - kl_theta
+
+
+def ground_truth_posterior(x_all: jnp.ndarray, labels: jnp.ndarray,
+                           prior: GMMPosterior, K: int) -> GMMPosterior:
+    """Closed-form conjugate posterior given the *true* component labels
+    (Sec. V-A: available for synthetic data) — the reference of Eq. 46."""
+    r = jax.nn.one_hot(labels, K, dtype=x_all.dtype)              # (Ntot, K)
+    stats = sufficient_stats(x_all, r, replication=1.0)
+    return posterior_from_stats(stats, prior)
+
+
+def predict_labels(x: jnp.ndarray, q: GMMPosterior) -> jnp.ndarray:
+    """Hard cluster assignment under the variational posterior."""
+    return jnp.argmax(responsibilities(x, q), axis=-1)

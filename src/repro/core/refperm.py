@@ -1,0 +1,31 @@
+"""Component-permutation utilities for the Eq. 46 metric.
+
+Mixture components carry no canonical order, so the KL between an estimated
+posterior and the ground-truth posterior is only meaningful modulo a
+permutation of components.  We build the stack of all K! permuted references
+once (host-side) and let algorithms._metrics take the min.
+"""
+from __future__ import annotations
+
+import itertools
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import expfam
+from repro.core.expfam import GMMPosterior
+
+
+def permuted_refs(ref: GMMPosterior, max_k_factorial: int = 720) -> jnp.ndarray:
+    """(K!, P) stack of pack_natural over all component permutations."""
+    K = ref.K
+    perms = list(itertools.permutations(range(K)))
+    if len(perms) > max_k_factorial:
+        raise ValueError(f"K={K} too large for exhaustive permutation matching")
+    stack = []
+    for p in perms:
+        idx = np.asarray(p)
+        q = GMMPosterior(alpha=ref.alpha[idx], m=ref.m[idx],
+                         beta=ref.beta[idx], W=ref.W[idx], nu=ref.nu[idx])
+        stack.append(expfam.pack_natural(q))
+    return jnp.stack(stack)

@@ -1,0 +1,8 @@
+# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
+# for compute hot-spots the paper itself optimizes with a custom
+# kernel. Leave this package empty if the paper has none.
+#
+# Kernels present (validated interpret=True vs ref.py; TPU-targeted):
+#   gmm_estep.py       — fused GMM VBE responsibilities + sufficient stats
+#   flash_attention.py — blocked online-softmax attention (causal/sliding)
+#   ssd_scan.py        — Mamba-2 SSD chunked scan with VMEM-carried state

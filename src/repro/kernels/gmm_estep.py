@@ -1,0 +1,114 @@
+"""Fused GMM VBE step (responsibilities + sufficient statistics) — Pallas TPU.
+
+The per-node VBE hot loop of the paper's application (Sec. IV / Appendix A)
+is O(T * K * D^2): for every data point, a Mahalanobis quadratic form per
+component, a row-softmax, then three accumulations (R_k, sum r x, sum r xx^T).
+Done naively this makes three passes over the data in HBM.  The kernel fuses
+everything into one pass: data blocks of `block_t` points stream through
+VMEM, quadratic forms are (T_b, D) @ (D, D) MXU matmuls per component, and
+the statistics accumulate in VMEM scratch across the sequential grid,
+written out once at the end.
+
+Inputs are the same precomputed per-component terms the oracle uses:
+  log_prior (K,)  Wn (K,D,D)=nu W   b (K,D)=nu W m   c (K,)=D/beta + nu mWm
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, mask_ref, lp_ref, wn_ref, b_ref, c_ref,
+            r_ref, stats_ref, acc_ref, *, K: int, D: int):
+    ti = pl.program_id(0)
+    nt = pl.num_programs(0)
+
+    @pl.when(ti == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...].astype(jnp.float32)                   # (Tb, D)
+    mask = mask_ref[...].astype(jnp.float32)             # (Tb, 1)
+    lp = lp_ref[...].astype(jnp.float32)                 # (1, K)
+    bmat = b_ref[...].astype(jnp.float32)                # (K, D)
+    cvec = c_ref[...].astype(jnp.float32)                # (1, K)
+
+    # quadratic forms, one MXU matmul per component (K is small, static)
+    quads = []
+    for k in range(K):
+        Wk = wn_ref[k].astype(jnp.float32)               # (D, D)
+        xW = jax.lax.dot_general(x, Wk, (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        quads.append(jnp.sum(xW * x, axis=1, keepdims=True))
+    quad = jnp.concatenate(quads, axis=1)                # (Tb, K)
+    cross = jax.lax.dot_general(x, bmat, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+    log_rho = lp - 0.5 * (quad - 2.0 * cross + cvec)
+
+    m = jnp.max(log_rho, axis=1, keepdims=True)
+    p = jnp.exp(log_rho - m)
+    r = p / jnp.sum(p, axis=1, keepdims=True) * mask     # (Tb, K)
+    r_ref[...] = r.astype(r_ref.dtype)
+
+    # accumulate sufficient statistics in VMEM scratch
+    # acc layout: rows [0:K] = sum_x (K, D); row-blocks K + k*D : K+(k+1)*D
+    # hold sum_xx_k (D, D); final row block holds R (K,) broadcast in col 0.
+    sum_x = jax.lax.dot_general(r, x, (((0,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)  # (K, D)
+    acc_ref[0:K, :] += sum_x
+    for k in range(K):
+        rx = x * r[:, k:k + 1]
+        xx = jax.lax.dot_general(rx, x, (((0,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        acc_ref[K + k * D:K + (k + 1) * D, :] += xx
+    Rk = jnp.sum(r, axis=0)                              # (K,)
+    acc_ref[K + K * D:K + K * D + K, 0:1] += Rk[:, None]
+
+    @pl.when(ti == nt - 1)
+    def _emit():
+        stats_ref[...] = acc_ref[...]
+
+
+def gmm_estep(x, mask, log_prior, Wn, b, c, *, block_t: int = 512,
+              interpret: bool = True):
+    """x (T, D), mask (T,).  Returns (r (T,K), R (K,), sum_x (K,D),
+    sum_xx (K,D,D)) — unreplicated stats, matching ref.gmm_estep."""
+    T, D = x.shape
+    K = log_prior.shape[0]
+    bt = min(block_t, max(8, T))
+    Tp = ((T + bt - 1) // bt) * bt
+    if Tp != T:
+        x = jnp.pad(x, ((0, Tp - T), (0, 0)))
+        mask = jnp.pad(mask, ((0, Tp - T),))
+    rows = K + K * D + K
+    r, stats = pl.pallas_call(
+        functools.partial(_kernel, K=K, D=D),
+        grid=(Tp // bt,),
+        in_specs=[
+            pl.BlockSpec((bt, D), lambda t: (t, 0)),
+            pl.BlockSpec((bt, 1), lambda t: (t, 0)),
+            pl.BlockSpec((1, K), lambda t: (0, 0)),
+            pl.BlockSpec((K, D, D), lambda t: (0, 0, 0)),
+            pl.BlockSpec((K, D), lambda t: (0, 0)),
+            pl.BlockSpec((1, K), lambda t: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bt, K), lambda t: (t, 0)),
+            pl.BlockSpec((rows, D), lambda t: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Tp, K), jnp.float32),
+            jax.ShapeDtypeStruct((rows, D), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((rows, D), jnp.float32)],
+        interpret=interpret,
+    )(x, mask[:, None], log_prior[None, :], Wn, b, c[None, :])
+    r = r[:T]
+    sum_x = stats[0:K, :]
+    sum_xx = stats[K:K + K * D, :].reshape(K, D, D)
+    R = stats[K + K * D:K + K * D + K, 0]
+    return r, R, sum_x, sum_xx

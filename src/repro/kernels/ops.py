@@ -1,0 +1,69 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+`interpret` defaults to True off-TPU (this container is CPU-only: kernels
+are *targeted* at TPU but *validated* by executing the kernel body in
+python via pallas interpret mode).  On a real TPU backend the same calls
+compile to Mosaic.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import gmm_estep as _ge
+from repro.kernels import ssd_scan as _ss
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("causal", "window", "block_q", "block_k"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    block_q: int = 128, block_k: int = 128):
+    """q (B,S,Hq,hd), k/v (B,S,Hkv,hd) GQA -> out (B,S,Hq,hd)."""
+    B, S, Hq, hd = q.shape
+    Hkv = k.shape[2]
+    g = Hq // Hkv
+    # fuse batch+heads; broadcast kv heads to q heads
+    qf = jnp.moveaxis(q, 2, 1).reshape(B * Hq, S, hd)
+    kf = jnp.moveaxis(jnp.repeat(k, g, axis=2), 2, 1).reshape(B * Hq, S, hd)
+    vf = jnp.moveaxis(jnp.repeat(v, g, axis=2), 2, 1).reshape(B * Hq, S, hd)
+    out = _fa.flash_attention(qf, kf, vf, causal=causal, window=window,
+                              block_q=block_q, block_k=block_k,
+                              interpret=_default_interpret())
+    return jnp.moveaxis(out.reshape(B, Hq, S, hd), 1, 2)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def ssd_scan(x, dt, A, Bm, Cm, *, chunk: int = 128):
+    """Mamba-2 SSD: x (B,S,H,P), dt (B,S,H), A (H,), Bm/Cm (B,S,N)."""
+    return _ss.ssd_scan(x, dt, A, Bm, Cm, chunk=chunk,
+                        interpret=_default_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("block_t",))
+def gmm_estep(x, mask, log_prior, Wn, b, c, *, block_t: int = 512):
+    return _ge.gmm_estep(x, mask, log_prior, Wn, b, c, block_t=block_t,
+                         interpret=_default_interpret())
+
+
+def gmm_estep_from_posterior(x, mask, q, *, block_t: int = 512):
+    """Convenience: compute the kernel's precomputed terms from a
+    GMMPosterior, then run the fused kernel.  Matches
+    gmm.responsibilities + gmm.sufficient_stats (replication=1)."""
+    from repro.core import expfam
+    D = x.shape[-1]
+    e_logpi = expfam.dirichlet_expected_log(q.alpha)
+    e_logdet = expfam.wishart_expected_logdet(q.W, q.nu)
+    log_prior = (e_logpi + 0.5 * e_logdet
+                 - 0.5 * D * jnp.log(2.0 * jnp.pi)).astype(jnp.float32)
+    Wn = (q.nu[:, None, None] * q.W).astype(jnp.float32)
+    b = jnp.einsum("kde,ke->kd", Wn, q.m).astype(jnp.float32)
+    c = (D / q.beta + jnp.einsum("kd,kd->k", q.m, b)).astype(jnp.float32)
+    return gmm_estep(x.astype(jnp.float32), mask.astype(jnp.float32),
+                     log_prior, Wn, b, c, block_t=block_t)

@@ -1,0 +1,83 @@
+"""Pure-jnp oracles for every Pallas kernel (the `ref.py` contract).
+
+Deliberately *naive* implementations — independent of the blocked/fused
+algorithms in the kernels — so tests/test_kernels.py exercises real
+re-derivations, not shared code paths.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# flash_attention oracle: materialised-logits causal/sliding attention
+# ---------------------------------------------------------------------------
+def attention(q, k, v, *, causal: bool = True, window: int = 0,
+              scale: float | None = None):
+    """q (B,H,S,hd), k/v (B,H,S,hd) (kv already broadcast to q heads)."""
+    S = q.shape[-2]
+    hd = q.shape[-1]
+    scale = scale if scale is not None else 1.0 / jnp.sqrt(hd).astype(
+        jnp.float32)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    i = jnp.arange(S)[:, None]
+    j = jnp.arange(S)[None, :]
+    ok = jnp.ones((S, S), bool)
+    if causal:
+        ok &= j <= i
+    if window > 0:
+        ok &= j > i - window
+    logits = jnp.where(ok[None, None], logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", w, v.astype(jnp.float32)).astype(
+        q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# ssd_scan oracle: step-by-step recurrence (no chunking at all)
+# ---------------------------------------------------------------------------
+def ssd(x, dt, A, Bm, Cm):
+    """x (B,S,H,P), dt (B,S,H), A (H,), Bm/Cm (B,S,N).
+
+    h_t = exp(dt_t A) h_{t-1} + dt_t * (B_t outer x_t);  y_t = C_t . h_t
+    Returns (y (B,S,H,P), h_final (B,H,P,N)).
+    """
+    Bb, S, H, P = x.shape
+    N = Bm.shape[-1]
+
+    def step(h, inp):
+        xt, dtt, bt, ct = inp              # (B,H,P), (B,H), (B,N), (B,N)
+        decay = jnp.exp(dtt * A[None, :])  # (B,H)
+        upd = dtt[..., None, None] * bt[:, None, None, :] * xt[..., None]
+        h = decay[..., None, None] * h + upd
+        y = jnp.einsum("bhpn,bn->bhp", h, ct)
+        return h, y
+
+    h0 = jnp.zeros((Bb, H, P, N), jnp.float32)
+    xs = (jnp.moveaxis(x.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(dt, 1, 0), jnp.moveaxis(Bm, 1, 0),
+          jnp.moveaxis(Cm, 1, 0))
+    h_fin, ys = jax.lax.scan(step, h0, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype), h_fin
+
+
+# ---------------------------------------------------------------------------
+# gmm_estep oracle: responsibilities + replicated sufficient statistics
+# ---------------------------------------------------------------------------
+def gmm_estep(x, mask, log_prior, Wn, b, c):
+    """x (T,D), mask (T,), per-component precomputed terms:
+    log_prior (K,) = E[ln pi] + 0.5 E[ln|L|] - D/2 ln 2pi
+    Wn (K,D,D) = nu_k W_k ; b (K,D) = nu_k W_k m_k ;
+    c (K,) = D/beta_k + nu_k m_k^T W_k m_k.
+    Returns (r (T,K), R (K,), sum_x (K,D), sum_xx (K,D,D))  [no N factor]."""
+    quad = jnp.einsum("td,kde,te->tk", x, Wn, x)
+    cross = x @ b.T                                        # (T,K)
+    e_quad = quad - 2.0 * cross + c[None, :]
+    log_rho = log_prior[None, :] - 0.5 * e_quad
+    r = jax.nn.softmax(log_rho, axis=-1) * mask[:, None]
+    R = jnp.sum(r, axis=0)
+    sum_x = r.T @ x
+    sum_xx = jnp.einsum("tk,td,te->kde", r, x, x)
+    return r, R, sum_x, sum_xx

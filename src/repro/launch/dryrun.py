@@ -1,0 +1,142 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST be the first two lines: jax locks the device count on first init.
+# The dry-run (and only the dry-run) builds the 256/512-chip production mesh
+# out of host-platform placeholder devices; nothing is ever allocated on
+# them (ShapeDtypeStruct in, compiled artifact out).
+
+import argparse          # noqa: E402
+import json              # noqa: E402
+import time              # noqa: E402
+import warnings          # noqa: E402
+
+warnings.filterwarnings("ignore", category=DeprecationWarning)
+
+import jax               # noqa: E402
+
+from repro.configs.base import ARCH_IDS, INPUT_SHAPES, get_config  # noqa: E402
+from repro.launch import hlo_analysis, specs  # noqa: E402
+from repro.launch.mesh import make_production_mesh, n_chips  # noqa: E402
+from repro.models.model import param_count  # noqa: E402
+
+
+def _lower_compile(cfg, shape, mesh, dp_mode, consensus_axis, use_kernels):
+    fn, in_specs = specs.build_step(cfg, shape, mesh, dp_mode=dp_mode,
+                                    consensus_axis=consensus_axis,
+                                    use_kernels=use_kernels)
+    with jax.set_mesh(mesh):
+        lowered = jax.jit(fn).lower(**in_specs)
+        compiled = lowered.compile()
+    return compiled
+
+
+def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
+            dp_mode: str = "allreduce", use_kernels: bool = False,
+            verbose: bool = True, cfg_override=None) -> dict:
+    cfg = cfg_override if cfg_override is not None else get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    consensus_axis = None
+    if dp_mode != "allreduce":
+        consensus_axis = "pod" if multi_pod else "data"
+
+    t0 = time.time()
+    compiled = _lower_compile(cfg, shape, mesh, dp_mode, consensus_axis,
+                              use_kernels)
+    t_compile = time.time() - t0
+
+    # model FLOPs: 6*N_active*D for train (fwd+bwd), 2*N_active*D inference
+    n_active = param_count(cfg, active_only=True)
+    n_tok = shape.global_batch * (shape.seq_len if shape.kind != "decode"
+                                  else 1)
+    mf = (6.0 if shape.kind == "train" else 2.0) * n_active * n_tok
+    mem = hlo_analysis.memory_per_device(compiled)
+
+    from repro.models.model import _homogeneous
+    if _homogeneous(cfg) and cfg.n_layers > 2:
+        # XLA cost analysis does not descend into while (scan) bodies;
+        # recover true totals from UNSCANNED 1- and 2-layer auxiliary
+        # compiles (all layer ops top-level, inner chunk loops unrolled),
+        # exact for homogeneous stacks — see hlo_analysis.extrapolate_layers.
+        c1 = hlo_analysis.analyze(
+            _lower_compile(cfg.replace(n_layers=1, scan_layers=False),
+                           shape, mesh, dp_mode, consensus_axis, use_kernels),
+            n_chips(mesh), model_flops=mf)
+        c2 = hlo_analysis.analyze(
+            _lower_compile(cfg.replace(n_layers=2, scan_layers=False),
+                           shape, mesh, dp_mode, consensus_axis, use_kernels),
+            n_chips(mesh), model_flops=mf)
+        roof = hlo_analysis.extrapolate_layers(c1, c2, cfg.n_layers)
+    else:
+        # unscanned archs (recurrentgemma): every layer is in the HLO, exact
+        roof = hlo_analysis.analyze(compiled, n_chips(mesh), model_flops=mf)
+    t_lower = 0.0
+
+    report = {
+        "arch": arch, "shape": shape_name, "kind": shape.kind,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "dp_mode": dp_mode, "use_kernels": use_kernels,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "memory_analysis": mem,
+        **roof.as_dict(),
+    }
+    if verbose:
+        gb = (mem.get("argument_size_in_bytes") or 0) / 2**30
+        tmp = (mem.get("temp_size_in_bytes") or 0) / 2**30
+        print(f"[dryrun] {arch:24s} {shape_name:12s} "
+              f"{report['mesh']:8s} {dp_mode:9s} "
+              f"args/dev {gb:8.2f} GiB  temp/dev {tmp:7.2f} GiB  "
+              f"Tc {roof.t_compute*1e3:9.3f} ms  Tm {roof.t_memory*1e3:9.3f} ms"
+              f"  Tcoll {roof.t_collective*1e3:9.3f} ms  "
+              f"-> {roof.bottleneck:10s} useful {roof.useful_flops_ratio:.2f}"
+              f"  (compile {t_compile:.0f}s)")
+    return report
+
+
+def main():
+    ap = argparse.ArgumentParser(description="Multi-pod dry-run")
+    ap.add_argument("--arch", default="all",
+                    help="arch id or 'all'")
+    ap.add_argument("--shape", default="all",
+                    help="input shape name or 'all'")
+    ap.add_argument("--multi_pod", action="store_true")
+    ap.add_argument("--both_meshes", action="store_true",
+                    help="run 16x16 AND 2x16x16 for each pair")
+    ap.add_argument("--dp_mode", default="allreduce",
+                    choices=["allreduce", "diffusion", "admm"])
+    ap.add_argument("--use_kernels", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    archs = list(ARCH_IDS) if args.arch == "all" else [args.arch]
+    shapes = (list(INPUT_SHAPES) if args.shape == "all" else [args.shape])
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    os.makedirs(args.out, exist_ok=True)
+    failures = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                tag = (f"{arch}_{shape}_{'2x16x16' if mp else '16x16'}"
+                       f"_{args.dp_mode}"
+                       + ("_kern" if args.use_kernels else ""))
+                try:
+                    rep = run_one(arch, shape, multi_pod=mp,
+                                  dp_mode=args.dp_mode,
+                                  use_kernels=args.use_kernels)
+                    with open(os.path.join(args.out, tag + ".json"),
+                              "w") as f:
+                        json.dump(rep, f, indent=1)
+                except Exception as e:  # noqa: BLE001
+                    failures.append((tag, repr(e)))
+                    print(f"[dryrun] FAIL {tag}: {e!r}")
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for tag, err in failures:
+            print(" ", tag, err[:200])
+        raise SystemExit(1)
+    print("\nall dry-runs compiled OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,192 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+compute term    = HLO_FLOPs / (chips * PEAK_FLOPS)
+memory term     = HLO_bytes / (chips * HBM_BW)
+collective term = collective_bytes / (chips * ICI_BW)
+
+HLO_FLOPs / HLO_bytes come from compiled.cost_analysis().  collective_bytes
+is parsed from the optimised HLO text: we sum the *result-shape* bytes of
+every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute instruction (per-device program; result bytes ~ wire
+bytes for reduce/permute ops, an upper bound for all-gather).  Fusion-nested
+occurrences are counted once (instruction granularity).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+# TPU v5e-class hardware constants (per chip), from the task spec.
+PEAK_FLOPS = 197e12        # bf16 FLOP/s
+HBM_BW = 819e9             # bytes/s
+ICI_BW = 50e9              # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "bf16": 2, "f16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# e.g.  %all-gather.3 = bf16[2,16,512]{2,1,0} all-gather(
+_INSTR_RE = re.compile(
+    r"=\s*(?:\()?\s*([a-z0-9]+)\[([\d,]*)\][^=]*?\s("
+    + "|".join(_COLLECTIVES) + r")(?:-start|-done)?\(")
+# tuple-result collectives:  = (bf16[...], bf16[...]) all-reduce(
+_TUPLE_RE = re.compile(
+    r"=\s*\(([^)]*)\)\s*(" + "|".join(_COLLECTIVES) + r")(?:-start)?\(")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+@dataclass
+class CollectiveStats:
+    bytes_by_kind: dict = field(default_factory=dict)
+    count_by_kind: dict = field(default_factory=dict)
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_kind.values())
+
+
+def collective_bytes(hlo_text: str) -> CollectiveStats:
+    stats = CollectiveStats()
+    seen_done = set()
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        if "-done(" in line:       # async pair: count the start only
+            continue
+        kind = None
+        nbytes = 0
+        # tuple-result ops first: async starts are (operand, result) tuples;
+        # the RESULT (largest element) is the wire-traffic proxy
+        mt = _TUPLE_RE.search(line)
+        if mt:
+            kind = mt.group(2)
+            sizes = [_shape_bytes(d, s)
+                     for d, s in _SHAPE_RE.findall(mt.group(1))]
+            nbytes = max(sizes) if sizes else 0
+        else:
+            m = _INSTR_RE.search(line)
+            if m:
+                dtype, dims, kind = m.group(1), m.group(2), m.group(3)
+                nbytes = _shape_bytes(dtype, dims)
+        if kind:
+            stats.bytes_by_kind[kind] = stats.bytes_by_kind.get(kind, 0) \
+                + nbytes
+            stats.count_by_kind[kind] = stats.count_by_kind.get(kind, 0) + 1
+    return stats
+
+
+@dataclass
+class Roofline:
+    """All raw quantities are PER-DEVICE: the compiled artifact is the SPMD
+    per-device program, so cost_analysis flops/bytes and the parsed
+    collective bytes are per-chip.  The task's `X / (chips * peak)` formulas
+    are therefore applied with the global `X = per_device * chips`, i.e.
+    t = per_device_X / peak — identical, with sharding imbalance already
+    reflected by whatever XLA replicated."""
+
+    flops: float               # per-device HLO FLOPs
+    hbm_bytes: float           # per-device bytes accessed (upper bound:
+    #                            HLO cost analysis ignores fusion reuse)
+    coll_bytes: float          # per-device collective wire bytes
+    n_chips: int
+    model_flops: float = 0.0   # 6*N*D analytic, GLOBAL
+    coll_detail: dict = field(default_factory=dict)
+    coll_counts: dict = field(default_factory=dict)
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """(model FLOPs per chip) / (HLO FLOPs per chip): <1 under remat /
+        redundant compute; >1 would indicate sharding that skips work."""
+        if not self.flops:
+            return 0.0
+        return (self.model_flops / self.n_chips) / self.flops
+
+    def as_dict(self) -> dict:
+        return {
+            "flops": self.flops, "hbm_bytes": self.hbm_bytes,
+            "coll_bytes": self.coll_bytes, "n_chips": self.n_chips,
+            "model_flops": self.model_flops,
+            "t_compute_s": self.t_compute, "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "coll_detail": self.coll_detail,
+            "coll_counts": self.coll_counts,
+        }
+
+
+def analyze(compiled, n_chips: int, model_flops: float = 0.0) -> Roofline:
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):
+        ca = ca[0]
+    flops = float(ca.get("flops", 0.0))
+    nbytes = float(ca.get("bytes accessed", 0.0))
+    stats = collective_bytes(compiled.as_text())
+    return Roofline(flops=flops, hbm_bytes=nbytes,
+                    coll_bytes=float(stats.total_bytes), n_chips=n_chips,
+                    model_flops=model_flops,
+                    coll_detail=stats.bytes_by_kind,
+                    coll_counts=stats.count_by_kind)
+
+
+def extrapolate_layers(c1: Roofline, c2: Roofline, n_layers: int) -> Roofline:
+    """Correct XLA's while-loop single-count: given rooflines of otherwise
+    identical 1-layer and 2-layer programs, the per-layer marginal cost is
+    (c2 - c1) and the L-layer total is c1 + (L-1)*(c2 - c1).  Exact for
+    layer-stacked scans (the layer loop is the only differing while loop;
+    inner attention/SSD chunk loops are unrolled — see layers.chunked_sdpa)."""
+    def ext(a, b):
+        return a + (n_layers - 1) * (b - a)
+
+    detail = {k: ext(c1.coll_detail.get(k, 0), c2.coll_detail.get(k, 0))
+              for k in set(c1.coll_detail) | set(c2.coll_detail)}
+    counts = {k: ext(c1.coll_counts.get(k, 0), c2.coll_counts.get(k, 0))
+              for k in set(c1.coll_counts) | set(c2.coll_counts)}
+    return Roofline(
+        flops=ext(c1.flops, c2.flops),
+        hbm_bytes=ext(c1.hbm_bytes, c2.hbm_bytes),
+        coll_bytes=ext(c1.coll_bytes, c2.coll_bytes),
+        n_chips=c1.n_chips, model_flops=c1.model_flops,
+        coll_detail=detail, coll_counts=counts)
+
+
+def memory_per_device(compiled) -> dict:
+    ma = compiled.memory_analysis()
+    if ma is None:
+        return {}
+    out = {}
+    for k in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "generated_code_size_in_bytes"):
+        out[k] = getattr(ma, k, None)
+    return out

@@ -1,0 +1,33 @@
+"""Production mesh construction.
+
+A FUNCTION, not a module-level constant — importing this module never
+touches jax device state (required so smoke tests see 1 CPU device while
+dryrun.py sees 512 host-platform placeholders).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: (data=16, model=16) = 256 chips (TPU v5e pod).
+    Multi-pod: (pod=2, data=16, model=16) = 512 chips across 2 pods."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_test_mesh(data: int = 2, model: int = 2, pod: int = 0):
+    """Small host-device mesh for tests (requires XLA_FLAGS host device
+    count >= data*model*max(pod,1), set by the *test process*, not here)."""
+    if pod:
+        return jax.make_mesh((pod, data, model), ("pod", "data", "model"))
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+def axis_sizes(mesh) -> dict:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def n_chips(mesh) -> int:
+    return int(mesh.devices.size)

@@ -1,0 +1,42 @@
+"""Serving launcher: batched generation with the smoke configs.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch mamba2_370m \
+        --requests 4 --max_new 32
+"""
+import argparse
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--requests", type=int, default=4)
+    ap.add_argument("--prompt_len", type=int, default=16)
+    ap.add_argument("--max_new", type=int, default=32)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--use_kernels", action="store_true")
+    args = ap.parse_args()
+
+    import jax
+    import numpy as np
+
+    from repro.configs.base import get_smoke_config
+    from repro.models import model as model_lib
+    from repro.serving import engine as eng
+
+    cfg = get_smoke_config(args.arch)
+    mesh = jax.make_mesh((1,), ("data",))
+    params = model_lib.init_params(cfg, jax.random.PRNGKey(0))
+    e = eng.Engine(cfg, mesh, params,
+                   max_seq=args.prompt_len + args.max_new + cfg.frontend_len,
+                   use_kernels=args.use_kernels)
+    rng = np.random.default_rng(0)
+    reqs = [eng.Request(
+        rng.integers(0, cfg.vocab_size, args.prompt_len).astype(np.int32),
+        args.max_new) for _ in range(args.requests)]
+    outs = e.generate(reqs, temperature=args.temperature)
+    for i, o in enumerate(outs):
+        print(f"request {i}: {o.tolist()}")
+
+
+if __name__ == "__main__":
+    main()

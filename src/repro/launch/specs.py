@@ -1,0 +1,148 @@
+"""ShapeDtypeStruct input specs + step builders for the multi-pod dry-run.
+
+Everything here is allocation-free: model/optimizer state comes from
+jax.eval_shape and inputs are ShapeDtypeStructs carrying NamedShardings, so
+lowering a 314B-parameter training step on 512 placeholder devices costs
+only compile time.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.dist import sharding
+from repro.launch import mesh as mesh_lib
+from repro.models import model as model_lib
+from repro.serving import engine
+from repro.training import train_step as ts
+
+SLIDING_WINDOW_LONG = 4096   # documented long_500k variant for full-attn archs
+
+
+def _sds(shape, dtype, mesh, spec):
+    return jax.ShapeDtypeStruct(shape, dtype,
+                                sharding=NamedSharding(mesh, spec))
+
+
+def _batch_axes(mesh: Mesh, batch: int):
+    """Greedy batch sharding over (pod, data): only axes that divide."""
+    sizes = mesh_lib.axis_sizes(mesh)
+    axes = []
+    rem = batch
+    for a in ("pod", "data"):
+        if a in sizes and rem % sizes[a] == 0:
+            axes.append(a)
+            rem //= sizes[a]
+    return tuple(axes)
+
+
+def arch_variant(cfg: ModelConfig, shape: ShapeConfig) -> ModelConfig:
+    """long_500k needs sub-quadratic attention: SSM/hybrid archs are
+    natively sub-quadratic; full-attention archs run the documented
+    sliding-window variant (DESIGN.md §5)."""
+    if shape.name == "long_500k" and cfg.window == 0 and any(
+            k == "attn" for k in cfg.layer_kinds()):
+        return cfg.replace(window=SLIDING_WINDOW_LONG, windowed_kv=True)
+    return cfg
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh, *,
+                dp_mode: str = "allreduce",
+                consensus_axis: Optional[str] = None) -> dict:
+    """ShapeDtypeStruct stand-ins for every input of the step being lowered.
+
+    train  -> {"state": TrainState, "batch": {tokens[, frontend]}}
+    prefill-> {"params", "tokens"[, "frontend"]}
+    decode -> {"params", "token", "cache", "pos"}
+    """
+    cfg = arch_variant(cfg, shape)
+    baxes = _batch_axes(mesh, shape.global_batch)
+    B, S = shape.global_batch, shape.seq_len
+    tok_dtype = jnp.int32
+    scanned = model_lib._homogeneous(cfg)
+
+    def param_specs(replica_axis=None):
+        pshape = jax.eval_shape(
+            functools.partial(model_lib.init_params, cfg),
+            jax.random.PRNGKey(0))
+        shd = sharding.param_shardings(
+            pshape, mesh, fsdp=cfg.fsdp and replica_axis is None,
+            scanned=scanned, replica_axis=replica_axis,
+            no_fsdp_keys=("moe",) if cfg.moe_local_dispatch else ())
+        return jax.tree.map(
+            lambda s, h: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=h),
+            pshape, shd)
+
+    if shape.kind == "train":
+        n_rep = (mesh_lib.axis_sizes(mesh).get(consensus_axis, 1)
+                 if dp_mode != "allreduce" else 1)
+        state_shape = jax.eval_shape(
+            functools.partial(ts.init_state, cfg, dp_mode=dp_mode,
+                              n_replicas=n_rep), jax.random.PRNGKey(0))
+        shd = ts.state_shardings(state_shape, cfg, mesh, dp_mode=dp_mode,
+                                 consensus_axis=consensus_axis)
+        state = jax.tree.map(
+            lambda s, h: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=h),
+            state_shape, shd)
+        batch = {"tokens": _sds((B, S), tok_dtype, mesh, P(baxes))}
+        if cfg.frontend != "none":
+            batch["frontend"] = _sds((B, cfg.frontend_len, cfg.d_model),
+                                     jnp.bfloat16, mesh, P(baxes))
+        return {"state": state, "batch": batch}
+
+    params = param_specs()
+    if shape.kind == "prefill":
+        out = {"params": params,
+               "tokens": _sds((B, S), tok_dtype, mesh, P(baxes))}
+        if cfg.frontend != "none":
+            out["frontend"] = _sds((B, cfg.frontend_len, cfg.d_model),
+                                   jnp.bfloat16, mesh, P(baxes))
+        return out
+
+    # decode: ONE new token against a cache of seq_len
+    cache_shape = jax.eval_shape(
+        functools.partial(model_lib.init_cache, cfg, B, S, jnp.bfloat16))
+    cache_shd = engine.cache_shardings(cache_shape, cfg, mesh)
+    cache = jax.tree.map(
+        lambda s, h: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=h),
+        cache_shape, cache_shd)
+    return {
+        "params": params,
+        "token": _sds((B, 1), tok_dtype, mesh, P(baxes)),
+        "cache": cache,
+        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def build_step(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh, *,
+               dp_mode: str = "allreduce",
+               consensus_axis: Optional[str] = None,
+               use_kernels: bool = False):
+    """Returns (fn, kwargs_specs) ready for jax.jit(fn).lower(**specs)."""
+    cfg = arch_variant(cfg, shape)
+    specs = input_specs(cfg, shape, mesh, dp_mode=dp_mode,
+                        consensus_axis=consensus_axis)
+    if shape.kind == "train":
+        step = ts.make_train_step(cfg, mesh, dp_mode=dp_mode,
+                                  consensus_axis=consensus_axis,
+                                  use_kernels=use_kernels)
+
+        def fn(state, batch):
+            return step(state, batch)
+
+        return fn, specs
+    if shape.kind == "prefill":
+        pre = engine.make_prefill_step(cfg, use_kernels=use_kernels)
+        if cfg.frontend != "none":
+            return (lambda params, tokens, frontend:
+                    pre(params, tokens, frontend)), specs
+        return (lambda params, tokens: pre(params, tokens)), specs
+
+    dec = engine.make_decode_step(cfg)
+    return (lambda params, token, cache, pos:
+            dec(params, token, cache, pos)), specs

@@ -1,0 +1,60 @@
+"""Training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch yi_6b --smoke \
+        --dp_mode diffusion --steps 50
+
+On this CPU container only --smoke (reduced configs) actually executes;
+the full configs are exercised via the dry-run (launch/dryrun.py).  Set
+--host_devices N to emulate a small mesh with host-platform devices.
+"""
+import argparse
+import os
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced same-family config")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--global_batch", type=int, default=8)
+    ap.add_argument("--seq_len", type=int, default=256)
+    ap.add_argument("--dp_mode", default="allreduce",
+                    choices=["allreduce", "diffusion", "admm"])
+    ap.add_argument("--host_devices", type=int, default=0,
+                    help="emulate N host devices (mesh data x model)")
+    ap.add_argument("--data_axis", type=int, default=1)
+    ap.add_argument("--model_axis", type=int, default=1)
+    ap.add_argument("--peak_lr", type=float, default=3e-4)
+    ap.add_argument("--use_kernels", action="store_true")
+    ap.add_argument("--ckpt_dir", default=None)
+    ap.add_argument("--log_every", type=int, default=10)
+    args = ap.parse_args()
+
+    if args.host_devices:
+        os.environ["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={args.host_devices}")
+
+    import jax  # noqa: E402  (after XLA_FLAGS)
+
+    from repro.configs.base import get_config, get_smoke_config
+    from repro.training import train_step as ts
+    from repro.training.trainer import Trainer
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    mesh = jax.make_mesh((args.data_axis, args.model_axis),
+                         ("data", "model"))
+    axis = "data" if args.dp_mode != "allreduce" else None
+    hyper = ts.TrainHyper(peak_lr=args.peak_lr, total_steps=args.steps,
+                          warmup=max(args.steps // 10, 5))
+    trainer = Trainer(cfg, mesh, dp_mode=args.dp_mode, consensus_axis=axis,
+                      hyper=hyper, global_batch=args.global_batch,
+                      seq_len=args.seq_len, ckpt_dir=args.ckpt_dir,
+                      use_kernels=args.use_kernels)
+    trainer.run(args.steps, log_every=args.log_every)
+    if args.ckpt_dir:
+        print("saved:", trainer.save(args.steps))
+
+
+if __name__ == "__main__":
+    main()

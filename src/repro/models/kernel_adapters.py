@@ -1,0 +1,18 @@
+"""Adapters wiring the Pallas kernels into the model block interface."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.kernels import ops
+from repro.models import layers
+
+
+def flash_attention_block(x, p, cfg: ModelConfig, positions, *,
+                          window: int = 0):
+    """Drop-in for layers.attention_block using the flash kernel."""
+    B, S, _ = x.shape
+    q, k, v = layers._qkv(x, p, cfg, positions)
+    out = ops.flash_attention(q, k, v, causal=True, window=window)
+    out = out.reshape(B, S, cfg.n_heads * cfg.hd) @ p["wo"]
+    return out, k, v

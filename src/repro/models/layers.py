@@ -1,0 +1,320 @@
+"""Shared neural layers for the assigned-architecture zoo.
+
+Pure functions over explicit parameter pytrees (dicts of jnp arrays).  All
+matmul-bearing ops accept a `compute_dtype`; accumulation-sensitive math
+(softmax, norms, rotary, recurrences) runs in float32.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+def dtype_of(name: str):
+    return {"float32": jnp.float32, "bfloat16": jnp.bfloat16,
+            "float16": jnp.float16}[name]
+
+
+def dense_init(key, shape, in_axis: int = 0, dtype=jnp.float32):
+    fan_in = shape[in_axis]
+    scale = 1.0 / math.sqrt(fan_in)
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * (1.0 + scale.astype(jnp.float32))
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings — full / half (chatglm "RoPE 2d") / M-RoPE
+# ---------------------------------------------------------------------------
+def _rope_angles(positions: jnp.ndarray, dim: int, theta: float):
+    """positions (..., S) -> cos/sin (..., S, dim/2)."""
+    inv_freq = 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+    ang = positions.astype(jnp.float32)[..., None] * inv_freq
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def _rotate(x, cos, sin):
+    """x (..., S, H, dim) rotated pairwise-interleaved-free (GPT-NeoX style:
+    split halves)."""
+    d2 = x.shape[-1] // 2
+    x1, x2 = x[..., :d2], x[..., d2:]
+    cos = cos[..., None, :]   # broadcast over heads: (..., S, 1, d2)
+    sin = sin[..., None, :]
+    xf1 = x1.astype(jnp.float32)
+    xf2 = x2.astype(jnp.float32)
+    out = jnp.concatenate([xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], -1)
+    return out.astype(x.dtype)
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, cfg: ModelConfig):
+    """x (B, S, H, hd); positions (B, S) or (3, B, S) for mrope."""
+    hd = x.shape[-1]
+    if cfg.rope_style == "half":
+        # chatglm: rotary over the first half of head dims, rest untouched
+        d_rot = hd // 2
+        cos, sin = _rope_angles(positions, d_rot, cfg.rope_theta)
+        return jnp.concatenate(
+            [_rotate(x[..., :d_rot], cos, sin), x[..., d_rot:]], -1)
+    if cfg.rope_style == "mrope":
+        # qwen2-vl: the hd/2 frequency slots are split into (t, h, w)
+        # sections, each driven by its own position-id stream.
+        sections = cfg.mrope_sections or (hd // 4, hd // 8, hd // 8)
+        assert sum(sections) == hd // 2, (sections, hd)
+        cos_parts, sin_parts = [], []
+        for sec_idx in range(3):
+            cos, sin = _rope_angles(positions[sec_idx], hd, cfg.rope_theta)
+            cos_parts.append(cos)
+            sin_parts.append(sin)
+        # select section slices from each stream (static python offsets)
+        splits = [0]
+        for s in sections:
+            splits.append(splits[-1] + int(s))
+        sel_cos = jnp.concatenate(
+            [cos_parts[i][..., splits[i]:splits[i + 1]] for i in range(3)], -1)
+        sel_sin = jnp.concatenate(
+            [sin_parts[i][..., splits[i]:splits[i + 1]] for i in range(3)], -1)
+        return _rotate(x, sel_cos, sel_sin)
+    cos, sin = _rope_angles(positions, hd, cfg.rope_theta)
+    return _rotate(x, cos, sin)
+
+
+def default_positions(cfg: ModelConfig, batch: int, seq: int,
+                      offset: jnp.ndarray | int = 0) -> jnp.ndarray:
+    pos = jnp.arange(seq)[None, :] + offset
+    pos = jnp.broadcast_to(pos, (batch, seq))
+    if cfg.rope_style == "mrope":
+        return jnp.broadcast_to(pos[None], (3, batch, seq))
+    return pos
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA; full-causal, sliding-window, and cached-decode variants)
+# ---------------------------------------------------------------------------
+def attn_params(key, cfg: ModelConfig, dtype):
+    hd = cfg.hd
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(kq, (cfg.d_model, cfg.n_heads * hd), 0, dtype),
+        "wk": dense_init(kk, (cfg.d_model, cfg.n_kv_heads * hd), 0, dtype),
+        "wv": dense_init(kv, (cfg.d_model, cfg.n_kv_heads * hd), 0, dtype),
+        "wo": dense_init(ko, (cfg.n_heads * hd, cfg.d_model), 0, dtype),
+    }
+
+
+def _qkv(x, p, cfg: ModelConfig, positions):
+    B, S, _ = x.shape
+    hd = cfg.hd
+    q = (x @ p["wq"]).reshape(B, S, cfg.n_heads, hd)
+    k = (x @ p["wk"]).reshape(B, S, cfg.n_kv_heads, hd)
+    v = (x @ p["wv"]).reshape(B, S, cfg.n_kv_heads, hd)
+    q = apply_rope(q, positions, cfg)
+    k = apply_rope(k, positions, cfg)
+    return q, k, v
+
+
+def sdpa(q, k, v, mask, scale):
+    """q (B,Sq,Hkv,G,hd), k/v (B,Skv,Hkv,hd), mask (B,1,1,Sq,Skv) add-mask."""
+    logits = jnp.einsum("bqhgd,bkhd->bhgqk", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    logits = logits + mask
+    w = jax.nn.softmax(logits.astype(jnp.float32), axis=-1).astype(q.dtype)
+    return jnp.einsum("bhgqk,bkhd->bqhgd", w, v)
+
+
+def causal_mask(seq: int, window: int = 0, dtype=jnp.float32):
+    i = jnp.arange(seq)[:, None]
+    j = jnp.arange(seq)[None, :]
+    ok = j <= i
+    if window > 0:
+        ok &= j > i - window
+    return jnp.where(ok, 0.0, -1e30).astype(dtype)[None, None, None]
+
+
+CHUNKED_ATTN_THRESHOLD = 2048
+ATTN_Q_CHUNK = 1024
+
+
+def chunked_sdpa(q, k, v, scale, *, window: int = 0,
+                 q_chunk: int = ATTN_Q_CHUNK, windowed_kv: bool = False):
+    """Memory-bounded attention: scan over query chunks with full K/V.
+
+    The scan is UNROLLED so the lowered HLO contains every chunk's einsums —
+    XLA's cost analysis (and therefore the dry-run roofline) counts the true
+    attention FLOPs, and peak memory is O(q_chunk * S) logits instead of
+    O(S^2).  This is the XLA-level analogue of the Pallas flash kernel
+    (kernels/flash_attention.py), used on the non-kernel path.
+
+    windowed_kv (sliding-window archs only): each chunk attends to a
+    dynamic_slice of window + q_chunk keys ending at its last row, turning
+    the per-chunk work from O(q_chunk * S) into O(q_chunk * window).
+    """
+    B, S, Hkv, G, hd = q.shape
+    q_chunk = min(q_chunk, S)
+    nq = S // q_chunk
+    assert nq * q_chunk == S, (S, q_chunk)
+    qc = q.reshape(B, nq, q_chunk, Hkv, G, hd)
+    qc = jnp.moveaxis(qc, 1, 0)                       # (nq, B, bq, Hkv, G, hd)
+    use_slice = windowed_kv and window > 0 and window + q_chunk < S
+    kv_len = window + q_chunk if use_slice else S
+
+    def one(carry, inp):
+        ci, qb = inp
+        i = ci * q_chunk + jnp.arange(q_chunk)[:, None]       # abs q rows
+        if use_slice:
+            start = jnp.clip(ci * q_chunk + q_chunk - kv_len, 0, S - kv_len)
+            kb = jax.lax.dynamic_slice(k, (0, start, 0, 0),
+                                       (B, kv_len, Hkv, hd))
+            vb = jax.lax.dynamic_slice(v, (0, start, 0, 0),
+                                       (B, kv_len, Hkv, hd))
+            j = start + jnp.arange(kv_len)[None, :]           # abs key cols
+        else:
+            kb, vb = k, v
+            j = jnp.arange(S)[None, :]
+        ok = j <= i
+        if window > 0:
+            ok &= j > i - window
+        mask = jnp.where(ok, 0.0, -1e30)[None, None, None].astype(jnp.float32)
+        return carry, sdpa(qb, kb, vb, mask, scale)
+
+    _, out = jax.lax.scan(one, 0, (jnp.arange(nq), qc), unroll=True)
+    return jnp.moveaxis(out, 0, 1).reshape(B, S, Hkv, G, hd)
+
+
+def attention_block(x, p, cfg: ModelConfig, positions, *, window: int = 0):
+    """Training/prefill attention.  Returns (out (B,S,d), k, v for caching)."""
+    B, S, _ = x.shape
+    q, k, v = _qkv(x, p, cfg, positions)
+    if cfg.attn_flat_heads:
+        # broadcast KV so the (flat) head axis shards over "model" cleanly
+        g = cfg.n_heads // cfg.n_kv_heads
+        kq = jnp.repeat(k, g, axis=2)
+        vq = jnp.repeat(v, g, axis=2)
+        qg = q.reshape(B, S, cfg.n_heads, 1, cfg.hd)
+    else:
+        g = cfg.n_heads // cfg.n_kv_heads
+        kq, vq = k, v
+        qg = q.reshape(B, S, cfg.n_kv_heads, g, cfg.hd)
+    scale = 1.0 / math.sqrt(cfg.hd)
+    if S > CHUNKED_ATTN_THRESHOLD:
+        out = chunked_sdpa(qg, kq, vq, scale, window=window,
+                           q_chunk=cfg.attn_q_chunk,
+                           windowed_kv=cfg.windowed_kv)
+    else:
+        mask = causal_mask(S, window, jnp.float32)
+        out = sdpa(qg, kq, vq, mask, scale)
+    out = out.reshape(B, S, cfg.n_heads * cfg.hd) @ p["wo"]
+    return out, k, v
+
+
+def attention_decode(x, p, cfg: ModelConfig, cache_k, cache_v, pos, *,
+                     window: int = 0):
+    """Single-token decode.  cache_k/v (B, Sc, Hkv, hd); pos scalar int32.
+
+    Full-attention archs use Sc = seq_len; sliding-window archs use a ring
+    buffer Sc = window (keys RoPE'd at absolute positions before writing).
+    Returns (out (B,1,d), new_cache_k, new_cache_v).
+    """
+    B = x.shape[0]
+    Sc = cache_k.shape[1]
+    positions = default_positions(cfg, B, 1, pos)
+    q, k, v = _qkv(x, p, cfg, positions)
+    slot = pos % Sc if window > 0 else pos
+    cache_k = jax.lax.dynamic_update_slice(
+        cache_k, k.astype(cache_k.dtype), (0, slot, 0, 0))
+    cache_v = jax.lax.dynamic_update_slice(
+        cache_v, v.astype(cache_v.dtype), (0, slot, 0, 0))
+    g = cfg.n_heads // cfg.n_kv_heads
+    qg = q.reshape(B, 1, cfg.n_kv_heads, g, cfg.hd)
+    mesh = jax.sharding.get_abstract_mesh()
+    model_ax = (dict(zip(mesh.axis_names, mesh.axis_sizes)).get("model", 1)
+                if mesh is not None and mesh.axis_names else 1)
+    if model_ax > 1 and cfg.n_kv_heads % model_ax != 0:
+        # kv heads not model-shardable -> the cache is head_dim-sharded
+        # (engine.cache_shardings); align q's hd axis with it so the QK^T
+        # contraction partial-sums small logits instead of all-gathering
+        # the 100s-of-MiB cache
+        from repro.dist.sharding import constrain_last_dim_model
+        qg = constrain_last_dim_model(qg)
+    idx = jnp.arange(Sc)
+    if window > 0:
+        valid = idx <= pos  # ring buffer: slots written so far (all, once warm)
+    else:
+        valid = idx <= pos
+    mask = jnp.where(valid, 0.0, -1e30).astype(jnp.float32)[None, None, None,
+                                                            None, :]
+    out = sdpa(qg, cache_k.astype(q.dtype), cache_v.astype(q.dtype), mask,
+               1.0 / math.sqrt(cfg.hd))
+    out = out.reshape(B, 1, cfg.n_heads * cfg.hd) @ p["wo"]
+    return out, cache_k, cache_v
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU)
+# ---------------------------------------------------------------------------
+def mlp_params(key, cfg: ModelConfig, dtype, d_ff: Optional[int] = None):
+    d_ff = d_ff or cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "wi": dense_init(k1, (cfg.d_model, d_ff), 0, dtype),
+        "wg": dense_init(k2, (cfg.d_model, d_ff), 0, dtype),
+        "wo": dense_init(k3, (d_ff, cfg.d_model), 0, dtype),
+    }
+
+
+def mlp_block(x, p):
+    h = jax.nn.silu(x @ p["wg"]) * (x @ p["wi"])
+    return h @ p["wo"]
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+def _vocab_rows(cfg: ModelConfig) -> int:
+    return max(cfg.vocab_pad, cfg.vocab_size)
+
+
+def embed_params(key, cfg: ModelConfig, dtype):
+    k1, k2 = jax.random.split(key)
+    V = _vocab_rows(cfg)
+    p = {"tok": (jax.random.normal(k1, (V, cfg.d_model)) *
+                 0.02).astype(dtype)}
+    if not cfg.tie_embeddings:
+        p["unembed"] = dense_init(k2, (cfg.d_model, V), 0, dtype)
+    if cfg.frontend != "none":
+        # projector from the (stubbed) modality encoder's output space
+        k3 = jax.random.fold_in(k2, 7)
+        p["frontend_proj"] = dense_init(
+            k3, (cfg.d_model, cfg.d_model), 0, dtype)
+    return p
+
+
+def embed(tokens, p, cfg: ModelConfig, frontend_embeds=None):
+    """tokens (B, S) int32.  For vlm/audio archs, the first `frontend_len`
+    positions take (projected) stub embeddings instead of token embeddings."""
+    x = p["tok"][tokens]
+    if frontend_embeds is not None and cfg.frontend_len > 0:
+        fe = frontend_embeds.astype(x.dtype) @ p["frontend_proj"]
+        x = jnp.concatenate([fe, x[:, cfg.frontend_len:]], axis=1)
+    return x
+
+
+def unembed(x, p, cfg: ModelConfig):
+    w = p["tok"].T if cfg.tie_embeddings else p["unembed"]
+    logits = (x @ w).astype(jnp.float32)
+    if _vocab_rows(cfg) > cfg.vocab_size:
+        pad_mask = jnp.arange(logits.shape[-1]) >= cfg.vocab_size
+        logits = jnp.where(pad_mask, -1e30, logits)
+    return logits

@@ -1,0 +1,170 @@
+"""Mamba-2 (SSD — state-space duality) block.  [arXiv:2405.21060]
+
+The sequence transform is the scalar-decay SSM
+    h_t = exp(dt_t * A_h) h_{t-1} + dt_t * B_t (x)  ,  y_t = C_t . h_t + D x_t
+computed with the chunked SSD algorithm: quadratic attention-like math inside
+chunks of length L (MXU-friendly), linear state passing across chunks.  The
+Pallas TPU kernel in repro/kernels/ssd_scan.py implements the same chunked
+schedule with VMEM-resident blocks; this file is the pure-jnp path used for
+training forward/backward and as the kernel oracle.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers
+
+
+def _dims(cfg: ModelConfig):
+    d_in = cfg.ssm_expand * cfg.d_model
+    n_heads = d_in // cfg.ssm_head_dim
+    return d_in, n_heads, cfg.ssm_state
+
+
+def ssm_params(key, cfg: ModelConfig, dtype):
+    d_in, H, N = _dims(cfg)
+    d = cfg.d_model
+    ks = jax.random.split(key, 6)
+    conv_dim = d_in + 2 * N  # x, B, C pass through the depthwise conv
+    return {
+        # fused in-projection: [z (d_in) | x (d_in) | B (N) | C (N) | dt (H)]
+        "in_proj": layers.dense_init(
+            ks[0], (d, 2 * d_in + 2 * N + H), 0, dtype),
+        "conv_w": (jax.random.normal(ks[1], (cfg.conv_width, conv_dim)) *
+                   0.1).astype(dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)).astype(jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "norm_scale": jnp.zeros((d_in,), dtype),
+        "out_proj": layers.dense_init(ks[2], (d_in, d), 0, dtype),
+    }
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv.  x (B, S, C), w (W, C)."""
+    W = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(W))
+    return out + b
+
+
+def ssd_chunked(x, dt, A, Bm, Cm, chunk: int, h0=None):
+    """Chunked SSD scan.
+
+    x  (B, S, H, P)   head inputs            dt (B, S, H)  softplus'd steps
+    A  (H,)           negative decay rates   Bm/Cm (B, S, N)  shared across H
+    Returns (y (B, S, H, P), final_state (B, H, P, N)).
+    """
+    Bb, S, H, P = x.shape
+    N = Bm.shape[-1]
+    L = min(chunk, S)
+    nc = S // L
+    assert nc * L == S, (S, L)
+    xc = x.reshape(Bb, nc, L, H, P)
+    dtc = dt.reshape(Bb, nc, L, H)
+    Bc = Bm.reshape(Bb, nc, L, N)
+    Cc = Cm.reshape(Bb, nc, L, N)
+
+    dA = dtc * A[None, None, None, :]                 # (B,nc,L,H) log-decay<=0
+    cum = jnp.cumsum(dA, axis=2)                      # inclusive cumsum
+    # --- intra-chunk (quadratic, causal-masked) ---
+    # M[l, l'] = C_l . B_l' * exp(cum_l - cum_l') * dt_l'  for l' <= l
+    cb = jnp.einsum("bcln,bcmn->bclm", Cc, Bc)        # (B,nc,L,L)
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]       # (B,nc,L,L,H)
+    mask = jnp.tril(jnp.ones((L, L), bool))
+    # mask BEFORE exp: exp on the (positive) masked-out entries overflows and
+    # its where-gradient would be inf * 0 = NaN in the backward pass
+    seg = jnp.where(mask[None, None, :, :, None], seg, -jnp.inf)
+    gates = jnp.exp(seg)
+    M = cb[..., None] * gates * dtc[:, :, None, :, :]         # (B,nc,L,L,H)
+    y_intra = jnp.einsum("bclmh,bcmhp->bclhp", M.astype(x.dtype), xc)
+
+    # --- chunk summaries:  S_c = sum_l exp(cum_L - cum_l) dt_l B_l x_l ---
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)           # (B,nc,L,H)
+    wx = (dtc * decay_to_end)[..., None] * xc                 # (B,nc,L,H,P)
+    S_c = jnp.einsum("bcln,bclhp->bchpn", Bc, wx.astype(jnp.float32))
+
+    # --- cross-chunk recurrence over nc (sequential scan) ---
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                   # (B,nc,H)
+    if h0 is None:
+        h0 = jnp.zeros((Bb, H, P, N), jnp.float32)
+
+    def step(h, inp):
+        dcy, s_new = inp                                      # (B,H), (B,H,P,N)
+        h_out = h                                             # state BEFORE chunk
+        h_next = dcy[:, :, None, None] * h + s_new
+        return h_next, h_out
+
+    dcy_t = jnp.moveaxis(chunk_decay, 1, 0)                   # (nc,B,H)
+    s_t = jnp.moveaxis(S_c, 1, 0)                             # (nc,B,H,P,N)
+    h_final, h_prevs = jax.lax.scan(step, h0, (dcy_t, s_t))
+    h_prevs = jnp.moveaxis(h_prevs, 0, 1)                     # (B,nc,H,P,N)
+
+    # --- inter-chunk contribution:  y_l += C_l . (exp(cum_l) h_prev) ---
+    in_decay = jnp.exp(cum)                                   # (B,nc,L,H)
+    y_inter = jnp.einsum("bcln,bchpn->bclhp", Cc,
+                         h_prevs) * in_decay[..., None]
+    y = y_intra + y_inter.astype(x.dtype)
+    return y.reshape(Bb, S, H, P), h_final
+
+
+def ssm_block(x, p, cfg: ModelConfig, *, return_state: bool = False,
+              use_kernel: bool = False):
+    """Full Mamba-2 block: in_proj -> conv -> SSD -> gated norm -> out_proj."""
+    d_in, H, N = _dims(cfg)
+    B, S, _ = x.shape
+    zxbcdt = x @ p["in_proj"]
+    z, xbc, dt = jnp.split(zxbcdt, [d_in, 2 * d_in + 2 * N], axis=-1)
+    xbc = jax.nn.silu(_causal_conv(xbc, p["conv_w"], p["conv_b"]))
+    xs, Bm, Cm = jnp.split(xbc, [d_in, d_in + N], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    xh = xs.reshape(B, S, H, cfg.ssm_head_dim)
+    if use_kernel:
+        from repro.kernels import ops
+        y, state = ops.ssd_scan(xh, dt, A, Bm, Cm, chunk=cfg.ssm_chunk)
+    else:
+        y, state = ssd_chunked(xh, dt, A, Bm, Cm, cfg.ssm_chunk)
+    y = y + p["D"][None, None, :, None].astype(y.dtype) * xh
+    y = y.reshape(B, S, d_in)
+    y = layers.rms_norm(y * jax.nn.silu(z), p["norm_scale"], cfg.norm_eps)
+    out = y @ p["out_proj"]
+    if return_state:
+        # conv tail: last (W-1) pre-conv inputs, for decode continuation
+        conv_buf = jnp.pad(  # handles S < W-1 (not in practice)
+            (x @ p["in_proj"])[:, :, d_in:2 * d_in + 2 * N],
+            ((0, 0), (max(0, cfg.conv_width - 1 - S), 0), (0, 0))
+        )[:, -(cfg.conv_width - 1):, :]
+        return out, (conv_buf, state)
+    return out
+
+
+def ssm_decode_step(x, p, cfg: ModelConfig, state):
+    """One decode step.  x (B, 1, d); state = (conv_buf (B,W-1,Cc), h (B,H,P,N))."""
+    d_in, H, N = _dims(cfg)
+    conv_buf, h = state
+    B = x.shape[0]
+    zxbcdt = x[:, 0, :] @ p["in_proj"]
+    z, xbc, dt = jnp.split(zxbcdt, [d_in, 2 * d_in + 2 * N], axis=-1)
+    # causal conv over the rolling buffer
+    seq = jnp.concatenate([conv_buf, xbc[:, None, :]], axis=1)  # (B, W, C)
+    conv_out = jnp.einsum("bwc,wc->bc", seq, p["conv_w"]) + p["conv_b"]
+    xbc_t = jax.nn.silu(conv_out)
+    xs, Bm, Cm = jnp.split(xbc_t, [d_in, d_in + N], axis=-1)
+    dt_t = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B, H)
+    A = -jnp.exp(p["A_log"])
+    xh = xs.reshape(B, H, cfg.ssm_head_dim).astype(jnp.float32)
+    decay = jnp.exp(dt_t * A[None, :])                           # (B, H)
+    upd = (dt_t[..., None, None] * Bm[:, None, None, :]
+           * xh[..., :, None])                                   # (B,H,P,N)
+    h = decay[..., None, None] * h + upd
+    y = jnp.einsum("bhpn,bn->bhp", h, Cm)
+    y = y + p["D"][None, :, None] * xh
+    y = y.reshape(B, d_in).astype(x.dtype)
+    y = layers.rms_norm(y * jax.nn.silu(z), p["norm_scale"], cfg.norm_eps)
+    out = (y @ p["out_proj"])[:, None, :]
+    new_buf = seq[:, 1:, :]
+    return out, (new_buf, h)

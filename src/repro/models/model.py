@@ -1,0 +1,301 @@
+"""Unified model assembly for all assigned architectures.
+
+Three block kinds, resolved per layer from `cfg.layer_kinds()`:
+  attn — pre-norm attention (full-causal or sliding-window) + MLP or MoE
+  rec  — Griffin RG-LRU recurrent block + MLP
+  ssm  — Mamba-2 SSD block (single-norm residual, no MLP; d_ff == 0)
+
+Homogeneous stacks (every dense/moe/ssm arch) use weight-stacked
+`jax.lax.scan` over layers — keeps the lowered HLO size O(1) in depth, which
+matters for the 40-pair dry-run compile budget.  Mixed-pattern archs
+(recurrentgemma) unroll a python loop over a params list.
+
+Public entry points:
+  init_params(cfg, key)
+  forward(cfg, params, tokens, frontend_embeds=None, collect_cache=False)
+  init_cache(cfg, batch, cache_len, dtype)
+  decode_step(cfg, params, token, cache, pos)
+  param_count(cfg, active_only=False)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers, mamba2, moe, rglru
+
+
+# ---------------------------------------------------------------------------
+# Per-layer init
+# ---------------------------------------------------------------------------
+def _layer_params(key, cfg: ModelConfig, kind: str, dtype):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    if kind == "attn":
+        p = {"norm1": jnp.zeros((cfg.d_model,), dtype),
+             "attn": layers.attn_params(k1, cfg, dtype),
+             "norm2": jnp.zeros((cfg.d_model,), dtype)}
+        if cfg.is_moe:
+            p["moe"] = moe.moe_params(k2, cfg, dtype)
+        else:
+            p["mlp"] = layers.mlp_params(k2, cfg, dtype)
+        return p
+    if kind == "rec":
+        return {"norm1": jnp.zeros((cfg.d_model,), dtype),
+                "rec": rglru.rec_params(k1, cfg, dtype),
+                "norm2": jnp.zeros((cfg.d_model,), dtype),
+                "mlp": layers.mlp_params(k2, cfg, dtype)}
+    if kind == "ssm":
+        return {"norm": jnp.zeros((cfg.d_model,), dtype),
+                "ssm": mamba2.ssm_params(k1, cfg, dtype)}
+    raise ValueError(kind)
+
+
+def _homogeneous(cfg: ModelConfig) -> bool:
+    kinds = cfg.layer_kinds()
+    return cfg.scan_layers and all(k == kinds[0] for k in kinds)
+
+
+def init_params(cfg: ModelConfig, key) -> dict:
+    dtype = layers.dtype_of(cfg.param_dtype)
+    ke, kl = jax.random.split(key)
+    params: dict[str, Any] = {"embed": layers.embed_params(ke, cfg, dtype),
+                              "final_norm": jnp.zeros((cfg.d_model,), dtype)}
+    kinds = cfg.layer_kinds()
+    if _homogeneous(cfg):
+        lkeys = jax.random.split(kl, cfg.n_layers)
+        params["blocks"] = jax.vmap(
+            lambda k: _layer_params(k, cfg, kinds[0], dtype))(lkeys)
+    else:
+        lkeys = jax.random.split(kl, cfg.n_layers)
+        params["blocks"] = [
+            _layer_params(lkeys[i], cfg, kinds[i], dtype)
+            for i in range(cfg.n_layers)]
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Per-layer forward (training / prefill)
+# ---------------------------------------------------------------------------
+def _layer_fwd(x, p, cfg: ModelConfig, kind: str, positions, *,
+               collect_cache: bool, use_kernels: bool):
+    """Returns (x, aux_loss, cache_entry)."""
+    # re-assert batch sharding at every layer boundary: without this GSPMD
+    # drifts to batch-replicated layouts inside the unrolled attention
+    # chunk loop (observed: 64 GiB collective-permutes of global-batch
+    # cotangents on yi-6b train_4k — see EXPERIMENTS.md §Perf)
+    from repro.dist.sharding import constrain_batch_dim
+    x = constrain_batch_dim(x)
+    if kind == "attn":
+        h = layers.rms_norm(x, p["norm1"], cfg.norm_eps)
+        if use_kernels:
+            from repro.models import kernel_adapters
+            a, k, v = kernel_adapters.flash_attention_block(
+                h, p["attn"], cfg, positions, window=cfg.window)
+        else:
+            a, k, v = layers.attention_block(
+                h, p["attn"], cfg, positions, window=cfg.window)
+        x = x + a
+        h2 = layers.rms_norm(x, p["norm2"], cfg.norm_eps)
+        if cfg.is_moe:
+            f, aux = moe.moe_block(h2, p["moe"], cfg)
+        else:
+            f, aux = layers.mlp_block(h2, p["mlp"]), 0.0
+        x = x + f
+        cache = _attn_cache_entry(cfg, k, v) if collect_cache else None
+        return x, aux, cache
+    if kind == "rec":
+        h = layers.rms_norm(x, p["norm1"], cfg.norm_eps)
+        if collect_cache:
+            r, state = rglru.rec_block(h, p["rec"], cfg, return_state=True)
+        else:
+            r, state = rglru.rec_block(h, p["rec"], cfg), None
+        x = x + r
+        h2 = layers.rms_norm(x, p["norm2"], cfg.norm_eps)
+        x = x + layers.mlp_block(h2, p["mlp"])
+        return x, 0.0, state
+    if kind == "ssm":
+        h = layers.rms_norm(x, p["norm"], cfg.norm_eps)
+        if collect_cache:
+            s, state = mamba2.ssm_block(h, p["ssm"], cfg, return_state=True,
+                                        use_kernel=use_kernels)
+        else:
+            s, state = mamba2.ssm_block(h, p["ssm"], cfg,
+                                        use_kernel=use_kernels), None
+        x = x + s
+        return x, 0.0, state
+    raise ValueError(kind)
+
+
+def _attn_cache_entry(cfg: ModelConfig, k, v):
+    """Trim prefill K/V to the ring-buffer window for sliding-window archs."""
+    if cfg.window > 0 and k.shape[1] > cfg.window:
+        k, v = k[:, -cfg.window:], v[:, -cfg.window:]
+    return (k, v)
+
+
+# ---------------------------------------------------------------------------
+# Whole-model forward
+# ---------------------------------------------------------------------------
+def forward(cfg: ModelConfig, params, tokens, frontend_embeds=None, *,
+            collect_cache: bool = False, use_kernels: bool = False):
+    """tokens (B, S) -> dict(logits (B,S,V) f32, aux_loss, cache?)."""
+    from repro.dist.sharding import constrain_batch_dim
+    B, S = tokens.shape
+    x = layers.embed(tokens, params["embed"], cfg, frontend_embeds)
+    x = constrain_batch_dim(x.astype(layers.dtype_of(cfg.compute_dtype)))
+    positions = layers.default_positions(cfg, B, S)
+    kinds = cfg.layer_kinds()
+
+    if _homogeneous(cfg):
+        kind = kinds[0]
+
+        def body(x, p):
+            x, aux, cache = _layer_fwd(
+                x, p, cfg, kind, positions,
+                collect_cache=collect_cache, use_kernels=use_kernels)
+            return x, (aux, cache)
+
+        if cfg.remat:
+            body = jax.checkpoint(body)
+        x, (auxs, caches) = jax.lax.scan(body, x, params["blocks"])
+        aux_loss = jnp.sum(jnp.asarray(auxs))
+        cache = caches  # stacked (n_layers, ...) pytree or None
+    else:
+        aux_loss = 0.0
+        cache = []
+        for i, p in enumerate(params["blocks"]):
+            fwd = functools.partial(
+                _layer_fwd, cfg=cfg, kind=kinds[i], positions=positions,
+                collect_cache=collect_cache, use_kernels=use_kernels)
+            if cfg.remat:
+                fwd = jax.checkpoint(fwd)
+            x, aux, c = fwd(x, p)
+            aux_loss = aux_loss + aux
+            cache.append(c)
+
+    x = layers.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = constrain_batch_dim(layers.unembed(x, params["embed"], cfg))
+    out = {"logits": logits, "aux_loss": aux_loss}
+    if collect_cache:
+        out["cache"] = cache
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+def _cache_len(cfg: ModelConfig, seq_len: int) -> int:
+    return min(seq_len, cfg.window) if cfg.window > 0 else seq_len
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq_len: int, dtype=jnp.bfloat16):
+    """Empty decode cache for generation from scratch (no prefill)."""
+    kinds = cfg.layer_kinds()
+    sc = _cache_len(cfg, seq_len)
+
+    def entry(kind):
+        if kind == "attn":
+            shp = (batch, sc, cfg.n_kv_heads, cfg.hd)
+            return (jnp.zeros(shp, dtype), jnp.zeros(shp, dtype))
+        if kind == "rec":
+            w = rglru._lru_width(cfg)
+            return (jnp.zeros((batch, cfg.conv_width - 1, w), dtype),
+                    jnp.zeros((batch, w), jnp.float32))
+        if kind == "ssm":
+            d_in, H, N = mamba2._dims(cfg)
+            return (jnp.zeros((batch, cfg.conv_width - 1, d_in + 2 * N),
+                              dtype),
+                    jnp.zeros((batch, H, cfg.ssm_head_dim, N), jnp.float32))
+        raise ValueError(kind)
+
+    if _homogeneous(cfg):
+        one = entry(kinds[0])
+        return jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (cfg.n_layers,) + a.shape),
+            one)
+    return [entry(k) for k in kinds]
+
+
+def _layer_decode(x, p, cfg: ModelConfig, kind: str, cache_entry, pos):
+    if kind == "attn":
+        h = layers.rms_norm(x, p["norm1"], cfg.norm_eps)
+        ck, cv = cache_entry
+        a, ck, cv = layers.attention_decode(h, p["attn"], cfg, ck, cv, pos,
+                                            window=cfg.window)
+        x = x + a
+        h2 = layers.rms_norm(x, p["norm2"], cfg.norm_eps)
+        if cfg.is_moe:
+            f, _ = moe.moe_block(h2, p["moe"], cfg)
+        else:
+            f = layers.mlp_block(h2, p["mlp"])
+        return x + f, (ck, cv)
+    if kind == "rec":
+        h = layers.rms_norm(x, p["norm1"], cfg.norm_eps)
+        r, state = rglru.rec_decode_step(h, p["rec"], cfg, cache_entry)
+        x = x + r
+        h2 = layers.rms_norm(x, p["norm2"], cfg.norm_eps)
+        return x + layers.mlp_block(h2, p["mlp"]), state
+    if kind == "ssm":
+        h = layers.rms_norm(x, p["norm"], cfg.norm_eps)
+        s, state = mamba2.ssm_decode_step(h, p["ssm"], cfg, cache_entry)
+        return x + s, state
+    raise ValueError(kind)
+
+
+def decode_step(cfg: ModelConfig, params, token, cache, pos):
+    """token (B, 1) int32, pos scalar int32 -> (logits (B,1,V), new cache)."""
+    x = params["embed"]["tok"][token].astype(
+        layers.dtype_of(cfg.compute_dtype))
+    kinds = cfg.layer_kinds()
+    if _homogeneous(cfg):
+        kind = kinds[0]
+
+        def body(x, pc):
+            p, c = pc
+            x, c = _layer_decode(x, p, cfg, kind, c, pos)
+            return x, c
+
+        x, new_cache = jax.lax.scan(body, x, (params["blocks"], cache))
+    else:
+        new_cache = []
+        for i, p in enumerate(params["blocks"]):
+            x, c = _layer_decode(x, p, cfg, kinds[i], cache[i], pos)
+            new_cache.append(c)
+    x = layers.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = layers.unembed(x, params["embed"], cfg)
+    return logits, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Analytic parameter counts (for 6ND roofline model-FLOPs)
+# ---------------------------------------------------------------------------
+def param_count(cfg: ModelConfig, active_only: bool = False) -> int:
+    d, hd = cfg.d_model, cfg.hd
+    total = cfg.vocab_size * d
+    if not cfg.tie_embeddings:
+        total += d * cfg.vocab_size
+    if cfg.frontend != "none":
+        total += d * d
+    for kind in cfg.layer_kinds():
+        if kind == "attn":
+            total += d * cfg.n_heads * hd + 2 * d * cfg.n_kv_heads * hd
+            total += cfg.n_heads * hd * d + 2 * d
+            if cfg.is_moe:
+                e = cfg.experts_per_token if active_only else cfg.n_experts
+                total += d * cfg.n_experts + e * 3 * d * cfg.d_ff
+            else:
+                total += 3 * d * cfg.d_ff
+        elif kind == "rec":
+            w = rglru._lru_width(cfg)
+            total += 2 * d * w + 2 * w * w + cfg.conv_width * w + w * d
+            total += 3 * d * cfg.d_ff + 2 * d
+        elif kind == "ssm":
+            d_in, H, N = mamba2._dims(cfg)
+            total += d * (2 * d_in + 2 * N + H)
+            total += cfg.conv_width * (d_in + 2 * N)
+            total += d_in * d + d_in + d + 3 * H
+    return total + d

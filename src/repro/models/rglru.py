@@ -1,0 +1,108 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin).  [arXiv:2402.19427]
+
+    r_t = sigmoid(W_a xi_t + b_a)          (recurrence gate)
+    i_t = sigmoid(W_x xi_t + b_x)          (input gate)
+    log a_t = -c * softplus(Lambda) * r_t  (c = 8)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * xi_t)
+
+computed over the sequence with a log-depth associative scan (TPU-friendly);
+decode carries (conv_buf, h).  The full residual block is Griffin's
+"recurrent block": two input linears -> (gelu gate | temporal conv -> RG-LRU)
+-> elementwise merge -> output linear.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers
+
+_C = 8.0
+
+
+def _lru_width(cfg: ModelConfig) -> int:
+    return cfg.lru_width or cfg.d_model
+
+
+def rec_params(key, cfg: ModelConfig, dtype):
+    d, w = cfg.d_model, _lru_width(cfg)
+    ks = jax.random.split(key, 6)
+    return {
+        "in_x": layers.dense_init(ks[0], (d, w), 0, dtype),
+        "in_gate": layers.dense_init(ks[1], (d, w), 0, dtype),
+        "conv_w": (jax.random.normal(ks[2], (cfg.conv_width, w)) *
+                   0.1).astype(dtype),
+        "conv_b": jnp.zeros((w,), dtype),
+        "w_a": layers.dense_init(ks[3], (w, w), 0, dtype),
+        "b_a": jnp.zeros((w,), jnp.float32),
+        "w_i": layers.dense_init(ks[4], (w, w), 0, dtype),
+        "b_i": jnp.zeros((w,), jnp.float32),
+        # Lambda parameterised so a ~ U[0.9, 0.999] at r=1 (Griffin init)
+        "lam": jnp.log(jnp.expm1(
+            -jnp.log(jnp.linspace(0.9, 0.999, w)) / _C)).astype(jnp.float32),
+        "out": layers.dense_init(ks[5], (w, d), 0, dtype),
+    }
+
+
+def _gates(xi, p):
+    xf = xi.astype(jnp.float32)
+    r = jax.nn.sigmoid(xf @ p["w_a"].astype(jnp.float32) + p["b_a"])
+    i = jax.nn.sigmoid(xf @ p["w_i"].astype(jnp.float32) + p["b_i"])
+    log_a = -_C * jax.nn.softplus(p["lam"]) * r
+    a = jnp.exp(log_a)
+    gated_in = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * xf)
+    return a, gated_in
+
+
+def rglru_scan(xi, p, h0=None):
+    """xi (B, S, w) -> (h_seq (B, S, w), h_final (B, w)) via associative scan."""
+    a, gin = _gates(xi, p)                       # (B, S, w) f32
+    if h0 is not None:
+        # fold the carry into the first step: h_1 = a_1 h_0 + gin_1
+        gin = gin.at[:, 0, :].add(a[:, 0, :] * h0)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a2 * a1, a2 * b1 + b2
+
+    a_s, h_seq = jax.lax.associative_scan(combine, (a, gin), axis=1)
+    return h_seq.astype(xi.dtype), h_seq[:, -1, :]
+
+
+def rec_block(x, p, cfg: ModelConfig, *, return_state: bool = False):
+    """Griffin recurrent block.  x (B, S, d)."""
+    gate = jax.nn.gelu((x @ p["in_gate"]).astype(jnp.float32))
+    xi = x @ p["in_x"]
+    xi_conv = _conv(xi, p)
+    h_seq, h_fin = rglru_scan(xi_conv, p)
+    merged = (h_seq.astype(jnp.float32) * gate).astype(x.dtype)
+    out = merged @ p["out"]
+    if return_state:
+        W = cfg.conv_width
+        conv_buf = jnp.pad(xi, ((0, 0), (max(0, W - 1 - xi.shape[1]), 0),
+                                (0, 0)))[:, -(W - 1):, :]
+        return out, (conv_buf, h_fin.astype(jnp.float32))
+    return out
+
+
+def _conv(xi, p):
+    W = p["conv_w"].shape[0]
+    xp = jnp.pad(xi, ((0, 0), (W - 1, 0), (0, 0)))
+    return sum(xp[:, i:i + xi.shape[1], :] * p["conv_w"][i]
+               for i in range(W)) + p["conv_b"]
+
+
+def rec_decode_step(x, p, cfg: ModelConfig, state):
+    """x (B, 1, d); state = (conv_buf (B, W-1, w), h (B, w))."""
+    conv_buf, h = state
+    gate = jax.nn.gelu((x[:, 0, :] @ p["in_gate"]).astype(jnp.float32))
+    xi = x[:, 0, :] @ p["in_x"]
+    seq = jnp.concatenate([conv_buf, xi[:, None, :]], axis=1)
+    xi_c = jnp.einsum("bwc,wc->bc", seq, p["conv_w"]) + p["conv_b"]
+    a, gin = _gates(xi_c[:, None, :], p)
+    h = a[:, 0, :] * h + gin[:, 0, :]
+    merged = (h * gate).astype(x.dtype)
+    out = (merged @ p["out"])[:, None, :]
+    return out, (seq[:, 1:, :], h)

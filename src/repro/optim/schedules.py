@@ -1,0 +1,21 @@
+"""Learning-rate and consensus-step schedules.
+
+`eta` / `kappa` are the paper's Eq. 29 / Eq. 40 — reused verbatim by the
+consensus optimiser wrappers (repro.optim.consensus) so the framework layer
+runs the same schedules the faithful layer validated.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.algorithms import eta_schedule as eta      # noqa: F401  Eq. 29
+from repro.core.algorithms import kappa_schedule as kappa  # noqa: F401  Eq. 40
+
+
+def cosine_warmup(step, *, peak_lr: float, warmup: int, total: int,
+                  floor: float = 0.1):
+    s = step.astype(jnp.float32)
+    warm = s / max(warmup, 1)
+    prog = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+    cos = floor + (1.0 - floor) * 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    return peak_lr * jnp.where(s < warmup, warm, cos)

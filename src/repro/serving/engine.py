@@ -1,0 +1,169 @@
+"""Serving engine: batched prefill + decode with a sharded KV/state cache.
+
+`prefill_step` and `decode_step` are the two functions the multi-pod dry-run
+lowers for the inference shapes (prefill_32k / decode_32k / long_500k).  The
+`Engine` class is the runnable host-side driver used by examples/serve_lm.py:
+it admits a batch of requests, prefills them (right-aligned padding), then
+decodes greedily/with temperature until max tokens.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.dist import sharding
+from repro.models import model as model_lib
+
+
+# ---------------------------------------------------------------------------
+# Cache shardings
+# ---------------------------------------------------------------------------
+def cache_shardings(cache, cfg: ModelConfig, mesh: Mesh):
+    """Batch over data/pod axes; heads (or head_dim / state channels) over
+    "model" when divisible.  Cache pytrees: attn (k,v) (L,B,S,H,hd);
+    ssm conv (L,B,W-1,C) + state (L,B,H,hd,N); rec conv + h (L?,B,w)."""
+    model_ax = dict(zip(mesh.axis_names, mesh.devices.shape)).get("model", 1)
+    dp_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    scanned = model_lib._homogeneous(cfg)
+
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def one(leaf):
+        rank = leaf.ndim
+        lead = 1 if scanned else 0           # layer-stack axis
+        spec = [None] * rank
+        if rank > lead:
+            # batch axis: only the dp axes that divide it (long_500k has B=1)
+            ok, rem = [], leaf.shape[lead]
+            for a in dp_axes:
+                if rem % sizes[a] == 0 and sizes[a] > 1:
+                    ok.append(a)
+                    rem //= sizes[a]
+            spec[lead] = tuple(ok) if ok else None
+        # model axis: first trailing axis (after batch) divisible
+        for ax in range(rank - 1, lead, -1):
+            if model_ax > 1 and leaf.shape[ax] % model_ax == 0 \
+                    and leaf.shape[ax] >= 2 * model_ax:
+                spec[ax] = "model"
+                break
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree.map(one, cache)
+
+
+# ---------------------------------------------------------------------------
+# Step functions (what the dry-run lowers)
+# ---------------------------------------------------------------------------
+def make_prefill_step(cfg: ModelConfig, *, use_kernels: bool = False):
+    def prefill_step(params, tokens, frontend=None):
+        out = model_lib.forward(cfg, params, tokens, frontend,
+                                collect_cache=True, use_kernels=use_kernels)
+        return out["logits"][:, -1:, :], out["cache"]
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig):
+    def decode_step(params, token, cache, pos):
+        return model_lib.decode_step(cfg, params, token, cache, pos)
+
+    return decode_step
+
+
+# ---------------------------------------------------------------------------
+# Host-side engine
+# ---------------------------------------------------------------------------
+class Request(NamedTuple):
+    prompt: np.ndarray        # (plen,) int32
+    max_new_tokens: int
+
+
+class Engine:
+    def __init__(self, cfg: ModelConfig, mesh: Mesh, params, *,
+                 max_seq: int = 1024, use_kernels: bool = False, seed: int = 0):
+        self.cfg, self.mesh, self.params = cfg, mesh, params
+        self.max_seq = max_seq
+        self.key = jax.random.PRNGKey(seed)
+        self._prefill = jax.jit(make_prefill_step(cfg,
+                                                  use_kernels=use_kernels))
+        self._decode = jax.jit(make_decode_step(cfg))
+
+    def generate(self, requests: list[Request], *,
+                 temperature: float = 0.0) -> list[np.ndarray]:
+        """Batched greedy/temperature generation."""
+        cfg = self.cfg
+        B = len(requests)
+        plen = max(len(r.prompt) for r in requests)
+        plen = max(plen, cfg.frontend_len + 1)
+        toks = np.zeros((B, plen), np.int32)
+        for i, r in enumerate(requests):
+            toks[i, plen - len(r.prompt):] = r.prompt  # right-aligned
+        frontend = None
+        if cfg.frontend != "none":
+            frontend = jnp.zeros((B, cfg.frontend_len, cfg.d_model),
+                                 jnp.float32)
+        max_new = max(r.max_new_tokens for r in requests)
+        total = min(self.max_seq, plen + max_new)
+
+        with jax.set_mesh(self.mesh):
+            logits, cache = self._prefill(self.params, jnp.asarray(toks),
+                                          frontend)
+            # re-home the prefill cache into a full-length decode cache
+            full = model_lib.init_cache(cfg, B, total, jnp.float32)
+            cache = _splice_cache(cfg, full, cache, plen)
+            out = [toks]
+            cur = _sample(logits, temperature, self._next_key())
+            for t in range(plen, total):
+                out.append(np.asarray(cur))
+                logits, cache = self._decode(self.params, cur, cache,
+                                             jnp.int32(t))
+                cur = _sample(logits, temperature, self._next_key())
+        seq = np.concatenate(out, axis=1)
+        return [seq[i, plen - len(r.prompt):plen + r.max_new_tokens]
+                for i, r in enumerate(requests)]
+
+    def _next_key(self):
+        self.key, k = jax.random.split(self.key)
+        return k
+
+
+def _sample(logits, temperature, key):
+    if temperature <= 0.0:
+        return jnp.argmax(logits[:, -1, :], axis=-1)[:, None].astype(jnp.int32)
+    g = jax.random.gumbel(key, logits[:, -1, :].shape)
+    return jnp.argmax(logits[:, -1, :] / temperature + g,
+                      axis=-1)[:, None].astype(jnp.int32)
+
+
+def _splice_cache(cfg: ModelConfig, full, prefill, plen: int):
+    """Copy the prefill cache into the (longer) decode cache buffers."""
+    kinds = cfg.layer_kinds()
+
+    def splice_attn(dst, src):
+        # dst (.., S_total, H, hd), src (.., S_pre, H, hd); align at offset 0
+        s = src.shape[-3]
+        start = (0,) * (dst.ndim - 3) + (0, 0, 0)
+        pad = dst.ndim - 3
+        idx = (0,) * pad + (0, 0, 0)
+        return jax.lax.dynamic_update_slice(dst, src.astype(dst.dtype), idx)
+
+    if model_lib._homogeneous(cfg):
+        kind = kinds[0]
+        if kind == "attn":
+            return tuple(splice_attn(d, s) for d, s in zip(full, prefill))
+        return jax.tree.map(lambda d, s: s.astype(d.dtype), full, prefill)
+    out = []
+    for i, kind in enumerate(kinds):
+        if kind == "attn":
+            out.append(tuple(splice_attn(d, s)
+                             for d, s in zip(full[i], prefill[i])))
+        else:
+            out.append(jax.tree.map(lambda d, s: s.astype(d.dtype),
+                                    full[i], prefill[i]))
+    return out

@@ -1,0 +1,68 @@
+"""Training loop driver: sharded state, host data pipeline, metrics, ckpt."""
+from __future__ import annotations
+
+import time
+from typing import Optional
+
+import jax
+import numpy as np
+
+from repro import checkpoint
+from repro.configs.base import ModelConfig
+from repro.data.tokens import Batcher
+from repro.training import train_step as ts
+
+
+class Trainer:
+    def __init__(self, cfg: ModelConfig, mesh, *, dp_mode: str = "allreduce",
+                 consensus_axis: Optional[str] = None,
+                 hyper: ts.TrainHyper = ts.TrainHyper(),
+                 global_batch: int = 8, seq_len: int = 256, seed: int = 0,
+                 ckpt_dir: Optional[str] = None, use_kernels: bool = False):
+        self.cfg, self.mesh = cfg, mesh
+        self.dp_mode, self.axis = dp_mode, consensus_axis
+        self.ckpt_dir = ckpt_dir
+        n_rep = (dict(zip(mesh.axis_names, mesh.devices.shape))
+                 .get(consensus_axis, 1)) if consensus_axis else 1
+        key = jax.random.PRNGKey(seed)
+        state = ts.init_state(cfg, key, dp_mode=dp_mode, n_replicas=n_rep)
+        self.shardings = ts.state_shardings(state, cfg, mesh, dp_mode=dp_mode,
+                                            consensus_axis=consensus_axis)
+        self.state = jax.device_put(state, self.shardings)
+        self.batch_shd = ts.batch_sharding(mesh)
+        self.batcher = Batcher(cfg.vocab_size, global_batch, seq_len,
+                               seed=seed, frontend_len=cfg.frontend_len,
+                               d_model=cfg.d_model)
+        step_fn = ts.make_train_step(cfg, mesh, dp_mode=dp_mode,
+                                     consensus_axis=consensus_axis,
+                                     hyper=hyper, use_kernels=use_kernels)
+        self.step_fn = jax.jit(step_fn, donate_argnums=0)
+        self.history: list[dict] = []
+
+    def run(self, n_steps: int, log_every: int = 10) -> list[dict]:
+        with jax.set_mesh(self.mesh):
+            t0 = time.time()
+            for i in range(n_steps):
+                batch = jax.device_put(self.batcher.next_batch(),
+                                       self.batch_shd)
+                self.state, metrics = self.step_fn(self.state, batch)
+                if (i + 1) % log_every == 0 or i == 0:
+                    m = {k: float(v) for k, v in metrics.items()}
+                    m["step"] = i + 1
+                    m["wall_s"] = time.time() - t0
+                    self.history.append(m)
+                    print(f"step {i+1:5d} loss {m['loss']:.4f} "
+                          f"lr {m['lr']:.2e} |g| {m['grad_norm']:.3f}"
+                          + (f" resid {m['consensus_residual']:.2e}"
+                             if "consensus_residual" in m else ""))
+        return self.history
+
+    def save(self, step: int) -> Optional[str]:
+        if self.ckpt_dir is None:
+            return None
+        return checkpoint.save(self.ckpt_dir, jax.device_get(self.state),
+                               step=step)
+
+    def restore(self, step: int):
+        restored = checkpoint.restore(self.ckpt_dir, self.state, step=step)
+        self.state = jax.device_put(restored, self.shardings)

@@ -1,0 +1,107 @@
+"""Exponential-family invariants (unit + hypothesis property tests)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import expfam
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _x64():
+    """x64 for the VB numerics in THIS module only (restored afterwards so
+    the float32 framework-layer tests aren't affected)."""
+    jax.config.update("jax_enable_x64", True)
+    yield
+    jax.config.update("jax_enable_x64", False)
+
+
+def random_posterior(rng, K, D):
+    m = rng.normal(size=(K, D)) * 3
+    beta = rng.uniform(0.5, 20, K)
+    nu = rng.uniform(D + 1.0, D + 50, K)
+    A = rng.normal(size=(K, D, D)) * 0.3
+    W = np.einsum("kij,klj->kil", A, A) + np.eye(D) * 0.5
+    alpha = rng.uniform(0.5, 30, K)
+    return expfam.GMMPosterior(alpha=jnp.asarray(alpha), m=jnp.asarray(m),
+                               beta=jnp.asarray(beta), W=jnp.asarray(W),
+                               nu=jnp.asarray(nu))
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(2, 5), st.integers(1, 4), st.integers(0, 10_000))
+def test_pack_unpack_roundtrip(K, D, seed):
+    q = random_posterior(np.random.default_rng(seed), K, D)
+    q2 = expfam.unpack_natural(expfam.pack_natural(q), K, D)
+    for a, b in zip(q, q2):
+        np.testing.assert_allclose(a, b, rtol=1e-8, atol=1e-8)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(2, 4), st.integers(1, 3), st.integers(0, 10_000))
+def test_grad_log_partition_is_expected_stats(K, D, seed):
+    """Eq. 10a: grad_phi A(phi) == E[u(z)] — pins the packing layout."""
+    q = random_posterior(np.random.default_rng(seed), K, D)
+    phi = expfam.pack_natural(q)
+    gA = jax.grad(lambda p: expfam.gmm_log_partition(
+        expfam.unpack_natural(p, K, D)))(phi)
+    es = expfam.expected_sufficient_stats(q)
+    np.testing.assert_allclose(gA, es, rtol=1e-6, atol=1e-8)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(2, 4), st.integers(1, 3), st.integers(0, 10_000),
+       st.integers(0, 10_000))
+def test_kl_properties(K, D, s1, s2):
+    q = random_posterior(np.random.default_rng(s1), K, D)
+    p = random_posterior(np.random.default_rng(s2), K, D)
+    klqq = float(expfam.gmm_kl(q, q))
+    klqp = float(expfam.gmm_kl(q, p))
+    assert abs(klqq) < 1e-6
+    assert klqp > -1e-8
+
+
+def test_kl_zero_iff_equal_and_positive_when_not():
+    q = random_posterior(np.random.default_rng(0), 3, 2)
+    p = q._replace(m=q.m + 0.5)
+    assert float(expfam.gmm_kl(q, p)) > 1e-3
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(2, 4), st.integers(1, 3), st.integers(0, 10_000))
+def test_projection_lands_in_domain(K, D, seed):
+    """Eq. 38b: after projection the point is in Omega, and projecting a
+    point already in Omega is (near) identity."""
+    rng = np.random.default_rng(seed)
+    q = random_posterior(rng, K, D)
+    phi = expfam.pack_natural(q)
+    assert bool(expfam.in_domain(phi, K, D))
+    proj = expfam.project_to_domain(phi, K, D)
+    np.testing.assert_allclose(proj, phi, rtol=1e-6, atol=1e-8)
+    # corrupt mildly (the ADMM scenario, Sec. III-B): nu below D-1 and a
+    # W^{-1} pushed indefinite via its n2 block
+    bad = np.asarray(phi).copy()
+    bad[K] = -(D + 1.0) / 2.0                # n1 => nu = -1 < D - 1
+    blk = 2 + D + D * D
+    n2_start = K + 2 + D
+    bad[n2_start:n2_start + D * D] += np.eye(D).reshape(-1) * 10.0
+    bad = jnp.asarray(bad)
+    assert not bool(expfam.in_domain(bad, K, D))
+    fixed = expfam.project_to_domain(bad, K, D)
+    assert bool(expfam.in_domain(fixed, K, D))
+
+
+def test_dirichlet_expected_log_matches_mc():
+    alpha = jnp.asarray([2.0, 5.0, 1.0])
+    rng = np.random.default_rng(0)
+    samples = rng.dirichlet(np.asarray(alpha), size=200_000)
+    mc = np.log(samples).mean(0)
+    np.testing.assert_allclose(expfam.dirichlet_expected_log(alpha), mc,
+                               atol=5e-3)
+
+
+def test_flat_dim():
+    for K, D in [(3, 2), (2, 5), (10, 52)]:
+        q = random_posterior(np.random.default_rng(0), K, D)
+        assert expfam.pack_natural(q).shape == (expfam.flat_dim(K, D),)

@@ -1,0 +1,97 @@
+"""Second conjugate-exponential instance: distributed Bayesian linear
+regression recovers the exact pooled posterior via the paper's machinery."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import linreg, network
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _x64():
+    jax.config.update("jax_enable_x64", True)
+    yield
+    jax.config.update("jax_enable_x64", False)
+
+
+D, N_NODES, NI = 4, 12, 30
+W_TRUE = np.array([1.5, -2.0, 0.5, 3.0])
+
+
+@pytest.fixture(scope="module")
+def data():
+    rng = np.random.default_rng(0)
+    X = rng.normal(size=(N_NODES, NI, D))
+    noise = rng.normal(size=(N_NODES, NI)) * 0.5      # lambda_true = 4
+    y = X @ W_TRUE + noise
+    return jnp.asarray(X), jnp.asarray(y)
+
+
+@pytest.fixture(scope="module")
+def setup(data):
+    X, y = data
+    q0 = linreg.prior(D)
+    mask = jnp.ones((NI,), X.dtype)
+    phi_star = jnp.stack([
+        linreg.local_optimum(X[i], y[i], mask, q0, float(N_NODES))
+        for i in range(N_NODES)])
+    ref = linreg.pooled_posterior(X.reshape(-1, D), y.reshape(-1), q0)
+    adj, _ = network.random_geometric_graph(N_NODES, seed=1)
+    return q0, phi_star, ref, adj
+
+
+def test_pack_unpack_roundtrip(setup):
+    _, phi_star, ref, _ = setup
+    q2 = linreg.unpack(linreg.pack(ref), D)
+    for a, b in zip(ref, q2):
+        np.testing.assert_allclose(a, b, rtol=1e-9)
+
+
+def test_grad_log_partition_is_expected_stats(setup):
+    """Eq. 10a for the Normal-Gamma family — pins the packing layout."""
+    _, _, ref, _ = setup
+    phi = linreg.pack(ref)
+    gA = jax.grad(lambda p: linreg.log_partition(linreg.unpack(p, D)))(phi)
+    e1, e2, e3, e4 = linreg.expected_stats(ref)
+    want = jnp.concatenate([e1[None], e2[None], e3, e4.reshape(-1)])
+    np.testing.assert_allclose(gA, want, rtol=1e-6, atol=1e-9)
+
+
+def test_cvb_average_is_exact_pooled_posterior(setup):
+    """Eq. 20 for this model: averaging local naturals == pooled Bayes."""
+    _, phi_star, ref, _ = setup
+    q = linreg.unpack(linreg.run_cvb(phi_star), D)
+    np.testing.assert_allclose(q.m, ref.m, rtol=1e-8)
+    np.testing.assert_allclose(q.a, ref.a, rtol=1e-8)
+    np.testing.assert_allclose(q.b, ref.b, rtol=1e-6)
+
+
+def test_dsvb_converges_to_pooled(setup):
+    _, phi_star, ref, adj = setup
+    W = network.nearest_neighbor_weights(adj)
+    phi = linreg.run_dsvb(phi_star, W, n_iters=800, tau=0.1)
+    kls = [float(linreg.kl(linreg.unpack(phi[i], D), ref))
+           for i in range(N_NODES)]
+    assert max(kls) < 0.5, kls
+    # estimates recover w
+    q = linreg.unpack(phi[0], D)
+    np.testing.assert_allclose(q.m, W_TRUE, atol=0.15)
+
+
+def test_admm_converges_to_pooled_faster(setup):
+    _, phi_star, ref, adj = setup
+    W = network.nearest_neighbor_weights(adj)
+    phi_a = linreg.run_admm(phi_star, adj, n_iters=200, rho=0.5)
+    kl_a = max(float(linreg.kl(linreg.unpack(phi_a[i], D), ref))
+               for i in range(N_NODES))
+    phi_d = linreg.run_dsvb(phi_star, W, n_iters=200, tau=0.1)
+    kl_d = max(float(linreg.kl(linreg.unpack(phi_d[i], D), ref))
+               for i in range(N_NODES))
+    assert kl_a < 0.05, kl_a             # ADMM: consensus to pooled Bayes
+    assert kl_a < kl_d                   # and faster than dSVB (Fig. 8 analogue)
+
+
+def test_noise_precision_recovered(setup):
+    _, phi_star, ref, _ = setup
+    assert abs(float(ref.a / ref.b) - 4.0) < 1.0   # lambda_true = 1/0.25

@@ -1,0 +1,55 @@
+"""Graph / combination-weight properties."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import network
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(8, 40), st.integers(0, 1000))
+def test_geometric_graph_connected_symmetric(n, seed):
+    adj, pos = network.random_geometric_graph(n, seed=seed)
+    a = np.asarray(adj)
+    assert a.shape == (n, n)
+    np.testing.assert_array_equal(a, a.T)
+    assert np.all(np.diag(a) == 0)
+    assert network._is_connected(a)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(8, 30), st.integers(0, 1000))
+def test_nearest_neighbor_weights_row_stochastic(n, seed):
+    adj, _ = network.random_geometric_graph(n, seed=seed)
+    W = np.asarray(network.nearest_neighbor_weights(adj))
+    np.testing.assert_allclose(W.sum(1), 1.0, atol=1e-6)
+    assert np.all(W >= 0)
+    # support = N_i u {i} only (Eq. 23 / 47)
+    mask = np.asarray(adj) + np.eye(n)
+    assert np.all(W[mask == 0] == 0)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(8, 30), st.integers(0, 1000))
+def test_metropolis_doubly_stochastic(n, seed):
+    adj, _ = network.random_geometric_graph(n, seed=seed)
+    W = np.asarray(network.metropolis_weights(adj))
+    np.testing.assert_allclose(W.sum(0), 1.0, atol=1e-6)
+    np.testing.assert_allclose(W.sum(1), 1.0, atol=1e-6)
+
+
+def test_ring_graph():
+    adj = np.asarray(network.ring_graph(6))
+    assert adj.sum() == 12
+    assert network.algebraic_connectivity(jnp.asarray(adj)) > 0
+
+
+def test_consensus_contraction():
+    """Row-stochastic diffusion must contract disagreement (the mechanism
+    behind Eq. 27b): repeated averaging converges to consensus."""
+    adj, _ = network.random_geometric_graph(12, seed=0)
+    W = np.asarray(network.nearest_neighbor_weights(adj))
+    x = np.random.default_rng(0).normal(size=(12, 5))
+    for _ in range(400):
+        x = W @ x
+    assert np.abs(x - x.mean(0, keepdims=True)).max() < 1e-6

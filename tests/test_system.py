@@ -1,0 +1,60 @@
+"""End-to-end behaviour of the paper's system: distributed VB on the sensor
+network reaches centralised-quality estimates and recovers the mixture."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import algorithms, expfam, gmm, network
+from repro.data import synthetic
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _x64():
+    jax.config.update("jax_enable_x64", True)
+    yield
+    jax.config.update("jax_enable_x64", False)
+
+
+def test_end_to_end_distributed_vb_recovers_mixture():
+    """Full pipeline: sample sensor data -> run dVB-ADMM -> the recovered
+    mixture means match the ground-truth components (modulo permutation)."""
+    data = synthetic.paper_synthetic(n_nodes=20, n_per_node=80, seed=7)
+    K, D = 3, 2
+    prior = expfam.noninformative_prior(K, D, beta0=0.1, w0_scale=10.0)
+    adj, _ = network.random_geometric_graph(20, seed=7)
+    init_q = algorithms._perturbed_init(prior, data.x, jax.random.PRNGKey(2))
+    run = algorithms.run_dvb_admm(data.x, data.mask, adj, prior,
+                                  n_iters=400, K=K, D=D, rho=0.5,
+                                  init_q=init_q)
+    q = expfam.unpack_natural(run.phi[0], K, D)
+    got = np.asarray(q.m)
+    want = synthetic.PAPER_MU
+    used = set()
+    for k in range(K):
+        d = np.linalg.norm(want - got[k], axis=1)
+        j = int(np.argmin(d))
+        assert d[j] < 0.35, (k, got[k], d)
+        assert j not in used
+        used.add(j)
+
+
+def test_end_to_end_clustering_accuracy():
+    """Hard-assignment clustering with the learned posterior separates the
+    synthetic components well (Table I-style evaluation)."""
+    data = synthetic.paper_synthetic(n_nodes=10, n_per_node=80, seed=3)
+    K, D = 3, 2
+    prior = expfam.noninformative_prior(K, D, beta0=0.1, w0_scale=10.0)
+    adj, _ = network.random_geometric_graph(10, seed=3)
+    W = network.nearest_neighbor_weights(adj)
+    init_q = algorithms._perturbed_init(prior, data.x, jax.random.PRNGKey(0))
+    run = algorithms.run_dsvb(data.x, data.mask, W, prior, n_iters=900,
+                              K=K, D=D, tau=0.2, init_q=init_q)
+    q = expfam.unpack_natural(run.phi[3], K, D)   # any node
+    x_all, labels = data.flat
+    pred = np.asarray(gmm.predict_labels(x_all, q))
+    labels = np.asarray(labels)
+    import itertools
+    acc = max(np.mean(np.asarray([p[i] for i in pred]) == labels)
+              for p in itertools.permutations(range(K)))
+    assert acc > 0.85, acc
