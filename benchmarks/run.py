@@ -6,8 +6,16 @@ trials are NOT replicated — see DESIGN.md §7); default settings are
 reduced-but-faithful for the CPU container.
 """
 import argparse
+import os
 import sys
 import traceback
+
+# self-bootstrapping: runnable as `python benchmarks/run.py` without any
+# PYTHONPATH setup (repo root for `benchmarks`, src/ for `repro`)
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+for _p in (_ROOT, os.path.join(_ROOT, "src")):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
 
 
 def main() -> None:

@@ -1,8 +1,17 @@
-"""Quickstart: the paper in ~40 lines.
+"""Quickstart: the paper in ~40 lines, via the unified VB engine.
 
 Distributed variational-Bayes estimation of a Gaussian mixture over a
 50-node sensor network — dSVB (Algorithm 1) and dVB-ADMM (Algorithm 2)
 against the centralised VB reference, using the paper's Sec. V-A setup.
+
+Each estimator is one `engine.run_vb(model, data, topology, ...)` call:
+the Bayesian-GMM `ConjugateExpModel` composed with a `FusionCenter`,
+`Diffusion(W)` or `ADMMConsensus(adj)` topology (see README.md for the
+equation -> code map).  The `algorithms.run_*` wrappers below bind that
+for the GMM; swap in `model.LinRegModel` + the same topologies for the
+linear-regression instance, or pass
+`executor=engine.MeshExecutor(mesh, "data")` to shard the node axis over
+a device mesh.
 
     PYTHONPATH=src python examples/quickstart.py
 """

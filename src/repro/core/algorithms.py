@@ -1,70 +1,33 @@
-"""The paper's five VB estimators over a sensor network.
+"""The paper's five VB estimators over a sensor network — GMM instance.
 
-All algorithms share the same per-iteration kernel: every node runs a VBE
-step + local VBM optimum to get phi*_{theta,i} (gmm.local_vbm_optimum_nodes),
-then differ in how the stack {phi*_i} is turned into the next iterate:
+All five are ONE engine call: the Bayesian-GMM `ConjugateExpModel`
+(core/model.py) composed with a topology (core/engine.py), which owns the
+single implementation of Eqs. 20 / 27a-b / 38a-b / 39 / 40:
 
-* cVB        — fusion centre: phi <- mean_i phi*_i                    (Eq. 20)
-* noncoop-VB — no communication: phi_i <- phi*_i (unreplicated data)
-* nsg-dVB    — one-step neighbour averaging of the local optima
-* dSVB       — Algorithm 1: natural-gradient step (27a) + diffusion (27b)
-* dVB-ADMM   — Algorithm 2: primal (38a) [+ projection (38b)] + dual (39)
+* cVB        — FusionCenter, one-shot      phi <- mean_i phi*_i   (Eq. 20)
+* noncoop-VB — Isolated, one-shot, unreplicated data
+* nsg-dVB    — Diffusion, one-shot (neighbour averaging of local optima)
+* dSVB       — Algorithm 1: Schedule(tau, d0) (27a) + Diffusion (27b)
+* dVB-ADMM   — Algorithm 2: ADMMConsensus (38a [+38b], 39, 40)
 
-Everything is a jax.lax.scan over iterations so whole runs jit; the node axis
-is a plain array axis here (see core/distributed.py for the shard_map /
-ppermute mesh-parallel runner).
+These wrappers keep the original `run_*` signatures (and the `ALGORITHMS`
+registry) so tests, benchmarks and examples are untouched; new code should
+call `engine.run_vb` directly.  See core/distributed.py for the shard_map /
+ppermute mesh-parallel execution of the same step functions.
 """
 from __future__ import annotations
 
 import functools
-from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import expfam, gmm
+from repro.core import engine, expfam
+from repro.core import model as model_lib
+from repro.core.engine import (  # noqa: F401  (re-exported legacy API)
+    VBRun, eta_schedule, kappa_schedule,
+)
 from repro.core.expfam import GMMPosterior
-
-
-# ---------------------------------------------------------------------------
-# Step-size schedules (Eqs. 29 and 40)
-# ---------------------------------------------------------------------------
-def eta_schedule(t: jnp.ndarray, tau: float, d0: float = 1.0) -> jnp.ndarray:
-    """eta_t = 1 / (d0 + tau * t); satisfies Robbins-Monro (Eq. 22)."""
-    return 1.0 / (d0 + tau * t)
-
-
-def kappa_schedule(t: jnp.ndarray, xi: float = 0.05) -> jnp.ndarray:
-    """kappa_t = 1 - 1/(1 + xi t)^2 ramps the ADMM dual step (Eq. 40)."""
-    return 1.0 - 1.0 / (1.0 + xi * t) ** 2
-
-
-# ---------------------------------------------------------------------------
-# Run result
-# ---------------------------------------------------------------------------
-class VBRun(NamedTuple):
-    phi: jnp.ndarray          # (N, P) final natural parameters per node
-    kl_mean: jnp.ndarray      # (T,)   mean_i KL(q_i || ground truth) per iter
-    kl_std: jnp.ndarray       # (T,)
-    kl_nodes: jnp.ndarray     # (T, N) per-node trajectory
-
-
-def _metrics(phi_nodes, ref_phi, K, D):
-    """Per-node KL to the ground-truth posterior (Eq. 46).
-
-    `ref_phi` may be (P,) for a fixed component labelling or (n_perms, P) —
-    a stack of component permutations of the reference — in which case the
-    permutation-invariant min-KL is reported (mixture components have no
-    canonical order; the paper's metric implicitly assumes aligned labels).
-    """
-    if ref_phi is None:
-        z = jnp.zeros(phi_nodes.shape[0], phi_nodes.dtype)
-        return z
-    if ref_phi.ndim == 1:
-        ref_phi = ref_phi[None]
-    kl = jax.vmap(lambda p: jnp.min(jax.vmap(
-        lambda r: expfam.gmm_kl_flat(p, r, K, D))(ref_phi)))(phi_nodes)
-    return kl
 
 
 def _init_phi(prior: GMMPosterior, n_nodes: int) -> jnp.ndarray:
@@ -83,29 +46,31 @@ def _perturbed_init(prior: GMMPosterior, x: jnp.ndarray, key,
     return prior._replace(m=prior.m + spread * (m - prior.m))
 
 
+def _gmm_run(x, mask, prior, topology, schedule, *, n_iters, K, D,
+             replication=None, ref_phi=None, init_q=None, metric_nodes=None):
+    mdl = model_lib.GMMModel(prior, K, D)
+    phi0 = _init_phi(prior if init_q is None else init_q, x.shape[0])
+    return engine.run_vb(mdl, (x, mask), topology, n_iters=n_iters,
+                         schedule=schedule, replication=replication,
+                         init_phi=phi0, ref_phi=ref_phi,
+                         metric_nodes=metric_nodes)
+
+
 # ---------------------------------------------------------------------------
 # cVB — centralised reference (fusion centre computes Eq. 20 exactly)
 # ---------------------------------------------------------------------------
 @functools.partial(jax.jit, static_argnames=("n_iters", "K", "D"))
 def run_cvb(x, mask, prior: GMMPosterior, *, n_iters: int, K: int, D: int,
             ref_phi=None, init_q: GMMPosterior | None = None) -> VBRun:
-    n_nodes = x.shape[0]
-    q0 = prior if init_q is None else init_q
-    phi = expfam.pack_natural(q0)
-
-    def step(phi, t):
-        phis = jnp.broadcast_to(phi, (n_nodes,) + phi.shape)
-        phi_star = gmm.local_vbm_optimum_nodes(
-            x, phis, prior, float(n_nodes), K, D, mask)
-        phi_new = jnp.mean(phi_star, axis=0)                      # Eq. 20
-        kl = _metrics(phi_new[None], ref_phi, K, D)
-        return phi_new, jnp.concatenate([kl, kl])  # mean == node value
-
-    phi, kls = jax.lax.scan(step, phi, jnp.arange(n_iters))
-    kl_nodes = kls[:, :1]
-    return VBRun(phi=jnp.broadcast_to(phi, (n_nodes,) + phi.shape),
-                 kl_mean=kl_nodes[:, 0], kl_std=jnp.zeros(n_iters, phi.dtype),
-                 kl_nodes=kl_nodes)
+    # all nodes share the fusion-centre iterate: evaluate the Eq. 46 metric
+    # on one representative node and report zero spread (kl_nodes is (T, 1))
+    run = _gmm_run(x, mask, prior, engine.FusionCenter(), engine.ONE_SHOT,
+                   n_iters=n_iters, K=K, D=D, ref_phi=ref_phi,
+                   init_q=init_q, metric_nodes=1)
+    return VBRun(phi=run.phi, kl_mean=run.kl_nodes[:, 0],
+                 kl_std=jnp.zeros(n_iters, run.phi.dtype),
+                 kl_nodes=run.kl_nodes,
+                 consensus_err=run.consensus_err)
 
 
 # ---------------------------------------------------------------------------
@@ -114,18 +79,9 @@ def run_cvb(x, mask, prior: GMMPosterior, *, n_iters: int, K: int, D: int,
 @functools.partial(jax.jit, static_argnames=("n_iters", "K", "D"))
 def run_noncoop(x, mask, prior: GMMPosterior, *, n_iters: int, K: int, D: int,
                 ref_phi=None, init_q: GMMPosterior | None = None) -> VBRun:
-    n_nodes = x.shape[0]
-    phi = _init_phi(prior if init_q is None else init_q, n_nodes)
-
-    def step(phi, t):
-        phi_star = gmm.local_vbm_optimum_nodes(
-            x, phi, prior, 1.0, K, D, mask)
-        kl = _metrics(phi_star, ref_phi, K, D)
-        return phi_star, kl
-
-    phi, kls = jax.lax.scan(step, phi, jnp.arange(n_iters))
-    return VBRun(phi=phi, kl_mean=jnp.mean(kls, 1), kl_std=jnp.std(kls, 1),
-                 kl_nodes=kls)
+    return _gmm_run(x, mask, prior, engine.Isolated(), engine.ONE_SHOT,
+                    n_iters=n_iters, K=K, D=D, replication=1.0,
+                    ref_phi=ref_phi, init_q=init_q)
 
 
 # ---------------------------------------------------------------------------
@@ -135,47 +91,21 @@ def run_noncoop(x, mask, prior: GMMPosterior, *, n_iters: int, K: int, D: int,
 def run_nsg_dvb(x, mask, weights, prior: GMMPosterior, *, n_iters: int,
                 K: int, D: int, ref_phi=None,
                 init_q: GMMPosterior | None = None) -> VBRun:
-    n_nodes = x.shape[0]
-    phi = _init_phi(prior if init_q is None else init_q, n_nodes)
-
-    def step(phi, t):
-        phi_star = gmm.local_vbm_optimum_nodes(
-            x, phi, prior, float(n_nodes), K, D, mask)
-        phi_new = weights @ phi_star
-        kl = _metrics(phi_new, ref_phi, K, D)
-        return phi_new, kl
-
-    phi, kls = jax.lax.scan(step, phi, jnp.arange(n_iters))
-    return VBRun(phi=phi, kl_mean=jnp.mean(kls, 1), kl_std=jnp.std(kls, 1),
-                 kl_nodes=kls)
+    return _gmm_run(x, mask, prior, engine.Diffusion(weights),
+                    engine.ONE_SHOT, n_iters=n_iters, K=K, D=D,
+                    ref_phi=ref_phi, init_q=init_q)
 
 
 # ---------------------------------------------------------------------------
 # dSVB — Algorithm 1 (stochastic natural gradient + diffusion)
 # ---------------------------------------------------------------------------
-@functools.partial(jax.jit,
-                   static_argnames=("n_iters", "K", "D"))
+@functools.partial(jax.jit, static_argnames=("n_iters", "K", "D"))
 def run_dsvb(x, mask, weights, prior: GMMPosterior, *, n_iters: int,
              K: int, D: int, tau: float = 0.2, d0: float = 1.0,
              ref_phi=None, init_q: GMMPosterior | None = None) -> VBRun:
-    n_nodes = x.shape[0]
-    phi = _init_phi(prior if init_q is None else init_q, n_nodes)
-
-    def step(phi, t):
-        # VBE + local VBM optimum (lines 4-5 of Algorithm 1)
-        phi_star = gmm.local_vbm_optimum_nodes(
-            x, phi, prior, float(n_nodes), K, D, mask)
-        # (27a): natural-gradient step  phi + eta (phi* - phi)
-        eta = eta_schedule(t.astype(phi.dtype) + 1.0, tau, d0)
-        varphi = phi + eta * (phi_star - phi)
-        # (27b): diffusion combine with neighbours
-        phi_new = weights @ varphi
-        kl = _metrics(phi_new, ref_phi, K, D)
-        return phi_new, kl
-
-    phi, kls = jax.lax.scan(step, phi, jnp.arange(n_iters))
-    return VBRun(phi=phi, kl_mean=jnp.mean(kls, 1), kl_std=jnp.std(kls, 1),
-                 kl_nodes=kls)
+    return _gmm_run(x, mask, prior, engine.Diffusion(weights),
+                    engine.Schedule(tau=tau, d0=d0), n_iters=n_iters,
+                    K=K, D=D, ref_phi=ref_phi, init_q=init_q)
 
 
 # ---------------------------------------------------------------------------
@@ -187,37 +117,10 @@ def run_dvb_admm(x, mask, adj, prior: GMMPosterior, *, n_iters: int,
                  K: int, D: int, rho: float = 0.5, xi: float = 0.05,
                  project: bool = True, ref_phi=None,
                  init_q: GMMPosterior | None = None) -> VBRun:
-    n_nodes = x.shape[0]
-    deg = jnp.sum(adj, axis=1)                                    # |N_i|
-    phi = _init_phi(prior if init_q is None else init_q, n_nodes)
-    lam = jnp.zeros_like(phi)                                     # lambda_i
-
-    def step(carry, t):
-        phi, lam = carry
-        # VBE + local optimum (lines 5-6 of Algorithm 2)
-        phi_star = gmm.local_vbm_optimum_nodes(
-            x, phi, prior, float(n_nodes), K, D, mask)
-        # (38a) primal:  (phi* - 2 lam + rho sum_j (phi_i + phi_j)) /(1+2 rho d)
-        neigh_sum = adj @ phi                                     # sum_j phi_j
-        phi_hat = (phi_star - 2.0 * lam
-                   + rho * (deg[:, None] * phi + neigh_sum))
-        phi_hat = phi_hat / (1.0 + 2.0 * rho * deg)[:, None]
-        if project:
-            # (38b) projection onto the natural-parameter domain Omega
-            phi_new = jax.vmap(
-                lambda p: expfam.project_to_domain(p, K, D))(phi_hat)
-        else:
-            phi_new = phi_hat
-        # (39) dual ascent with the kappa_t ramp (Eq. 40)
-        kappa = kappa_schedule(t.astype(phi.dtype) + 1.0, xi)
-        resid = deg[:, None] * phi_new - adj @ phi_new            # sum_j (i-j)
-        lam_new = lam + kappa * rho / 2.0 * resid
-        kl = _metrics(phi_new, ref_phi, K, D)
-        return (phi_new, lam_new), kl
-
-    (phi, lam), kls = jax.lax.scan(step, (phi, lam), jnp.arange(n_iters))
-    return VBRun(phi=phi, kl_mean=jnp.mean(kls, 1), kl_std=jnp.std(kls, 1),
-                 kl_nodes=kls)
+    topology = engine.ADMMConsensus(adj, rho=rho, xi=xi, project=project)
+    return _gmm_run(x, mask, prior, topology, engine.Schedule(),
+                    n_iters=n_iters, K=K, D=D, ref_phi=ref_phi,
+                    init_q=init_q)
 
 
 ALGORITHMS = {

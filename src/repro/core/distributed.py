@@ -1,62 +1,39 @@
 """Mesh-parallel execution of the paper's algorithms via shard_map.
 
-Two levels of fidelity:
+These are the same engine step functions as core/algorithms.py — the ONLY
+difference is the executor: `engine.MeshExecutor(mesh, axis)` shards the
+node axis over a mesh axis and each topology swaps its dense combine for
+the equivalent collective:
 
-* `run_dsvb_sharded` / `run_admm_sharded` — the *faithful* arbitrary-graph
-  algorithms with the node axis sharded over the mesh `data` axis.  The
-  diffusion combine `W @ varphi` needs every node's message, which on an
-  arbitrary graph is realised as an `all_gather` along `data` followed by the
-  local rows of W.  (On a real WSN each node only receives from neighbours;
-  on a TPU mesh the all_gather is the collective that implements "every node
-  can see the messages addressed to it".)
+* `Diffusion` / `ADMMConsensus` — the *faithful* arbitrary-graph
+  algorithms: the combine `W @ varphi` needs every node's message, which on
+  an arbitrary graph is realised as an `all_gather` along the axis followed
+  by the local rows of W.  (On a real WSN each node only receives from
+  neighbours; on a TPU mesh the all_gather is the collective that
+  implements "every node can see the messages addressed to it".)
 
-* `ring_diffusion_combine` — the TPU-adapted topology: the communication
-  graph *is* the ICI ring along a mesh axis, so the combine is two
-  `lax.ppermute`s (left+right neighbour) and a weighted sum — no all_gather,
-  no all_reduce.  This is the pattern the framework layer's `dp_mode=
-  diffusion` optimiser uses (see repro/optim/consensus.py) and the basis of
-  the beyond-paper collective-bytes reduction measured in EXPERIMENTS.md.
+* `RingDiffusion` — the TPU-adapted topology: the communication graph *is*
+  the ICI ring along a mesh axis, so the combine is two `lax.ppermute`s
+  (left+right neighbour) and a weighted sum — no all_gather, no all_reduce.
+  This is the pattern the framework layer's `dp_mode=diffusion` optimiser
+  uses (see repro/optim/consensus.py) and the basis of the beyond-paper
+  collective-bytes reduction measured in EXPERIMENTS.md.
 
-Numerical equivalence of the sharded and single-array runners is asserted in
-tests/test_distributed.py (run in a subprocess with host-platform devices).
+Numerical equivalence of the sharded and single-array executors is asserted
+in tests/test_distributed.py and tests/test_engine.py (run in a subprocess
+with host-platform devices).
 """
 from __future__ import annotations
 
-import functools
-
-import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh
 
-from repro.core import expfam, gmm
-from repro.core.algorithms import eta_schedule, kappa_schedule
+from repro.core import engine
+from repro.core import model as model_lib
 
-
-def ring_diffusion_combine(varphi: jnp.ndarray, axis_name: str,
-                           w_self: float = 1.0 / 3.0) -> jnp.ndarray:
-    """Eq. 27b on a ring: phi_i = w_self*phi_i + w_n*(phi_{i-1} + phi_{i+1}).
-
-    Uses two collective_permutes (the TPU ICI-native neighbour exchange);
-    with w_self = 1/3 this is exactly the nearest-neighbour rule (Eq. 47)
-    on a cycle graph.
-    """
-    n = jax.lax.axis_size(axis_name)
-    fwd = [(i, (i + 1) % n) for i in range(n)]
-    bwd = [(i, (i - 1) % n) for i in range(n)]
-    # Node-level ring shift for a block of `B` nodes per mesh slot: interior
-    # neighbours are a local roll; only the two boundary rows cross the ICI
-    # link (ppermute) — the minimal-traffic neighbour exchange.
-    prev_tail = jax.lax.ppermute(varphi[-1:], axis_name, fwd)
-    next_head = jax.lax.ppermute(varphi[:1], axis_name, bwd)
-    shifted_right = jnp.concatenate([prev_tail, varphi[:-1]], 0)  # phi_{i-1}
-    shifted_left = jnp.concatenate([varphi[1:], next_head], 0)    # phi_{i+1}
-    w_n = (1.0 - w_self) / 2.0
-    return w_self * varphi + w_n * (shifted_right + shifted_left)
-
-
-def _vbe_local(x, mask, phi, prior, n_nodes, K, D):
-    return gmm.local_vbm_optimum_nodes(x, phi, prior, float(n_nodes), K, D,
-                                       mask)
+# Backward-compatible alias: the ring combine primitive now lives in the
+# engine (shared with optim/consensus.py).
+ring_diffusion_combine = engine.ring_combine_block
 
 
 def run_dsvb_sharded(mesh: Mesh, x, mask, weights, prior, *, n_iters: int,
@@ -67,92 +44,48 @@ def run_dsvb_sharded(mesh: Mesh, x, mask, weights, prior, *, n_iters: int,
     x (N, Ni, D), mask (N, Ni), weights (N, N) row-stochastic.  Returns the
     final (N, P) natural parameters (fully replicated logical output).
     """
-    n_nodes = x.shape[0]
-    phi0 = jnp.broadcast_to(expfam.pack_natural(prior),
-                            (n_nodes, expfam.flat_dim(K, D)))
-
-    @functools.partial(
-        jax.shard_map, mesh=mesh,
-        in_specs=(P(axis), P(axis), P(axis), P(axis)),
-        out_specs=P(axis))
-    def run(x_l, mask_l, w_rows, phi_l):
-        def step(phi_l, t):
-            phi_star = _vbe_local(x_l, mask_l, phi_l, prior, n_nodes, K, D)
-            eta = eta_schedule(t.astype(phi_l.dtype) + 1.0, tau, d0)
-            varphi = phi_l + eta * (phi_star - phi_l)
-            # arbitrary graph: gather everyone's message, apply local W rows
-            varphi_all = jax.lax.all_gather(varphi, axis, tiled=True)
-            return w_rows @ varphi_all, None
-
-        phi_l, _ = jax.lax.scan(step, phi_l, jnp.arange(n_iters))
-        return phi_l
-
-    return run(x, mask, weights, phi0)
+    run = engine.run_vb(
+        model_lib.GMMModel(prior, K, D), (x, mask),
+        engine.Diffusion(weights), n_iters=n_iters,
+        schedule=engine.Schedule(tau=tau, d0=d0),
+        executor=engine.MeshExecutor(mesh, axis), diagnostics=False)
+    return run.phi
 
 
 def run_dsvb_ring_sharded(mesh: Mesh, x, mask, prior, *, n_iters: int,
                           K: int, D: int, tau: float = 0.2, d0: float = 1.0,
+                          w_self: float = 1.0 / 3.0,
                           axis: str = "data") -> jnp.ndarray:
-    """dSVB on the TPU-native ring topology: one node per mesh slot along
+    """dSVB on the TPU-native ring topology: node blocks per mesh slot along
     `axis`, combine via ppermute only (no all_gather)."""
-    n_nodes = x.shape[0]
-    phi0 = jnp.broadcast_to(expfam.pack_natural(prior),
-                            (n_nodes, expfam.flat_dim(K, D)))
-
-    @functools.partial(
-        jax.shard_map, mesh=mesh,
-        in_specs=(P(axis), P(axis), P(axis)),
-        out_specs=P(axis))
-    def run(x_l, mask_l, phi_l):
-        def step(phi_l, t):
-            phi_star = _vbe_local(x_l, mask_l, phi_l, prior, n_nodes, K, D)
-            eta = eta_schedule(t.astype(phi_l.dtype) + 1.0, tau, d0)
-            varphi = phi_l + eta * (phi_star - phi_l)
-            return ring_diffusion_combine(varphi, axis), None
-
-        phi_l, _ = jax.lax.scan(step, phi_l, jnp.arange(n_iters))
-        return phi_l
-
-    return run(x, mask, phi0)
+    run = engine.run_vb(
+        model_lib.GMMModel(prior, K, D), (x, mask),
+        engine.RingDiffusion(w_self), n_iters=n_iters,
+        schedule=engine.Schedule(tau=tau, d0=d0),
+        executor=engine.MeshExecutor(mesh, axis), diagnostics=False)
+    return run.phi
 
 
 def run_admm_sharded(mesh: Mesh, x, mask, adj, prior, *, n_iters: int,
                      K: int, D: int, rho: float = 0.5, xi: float = 0.05,
                      project: bool = True, axis: str = "data") -> jnp.ndarray:
     """Faithful dVB-ADMM with the node axis sharded over `axis`."""
-    n_nodes = x.shape[0]
-    pdim = expfam.flat_dim(K, D)
-    phi0 = jnp.broadcast_to(expfam.pack_natural(prior), (n_nodes, pdim))
-    lam0 = jnp.zeros((n_nodes, pdim), phi0.dtype)
+    run = engine.run_vb(
+        model_lib.GMMModel(prior, K, D), (x, mask),
+        engine.ADMMConsensus(adj, rho=rho, xi=xi, project=project),
+        n_iters=n_iters, executor=engine.MeshExecutor(mesh, axis),
+        diagnostics=False)
+    return run.phi
 
-    @functools.partial(
-        jax.shard_map, mesh=mesh,
-        in_specs=(P(axis), P(axis), P(axis), P(axis), P(axis)),
-        out_specs=P(axis))
-    def run(x_l, mask_l, adj_rows, phi_l, lam_l):
-        deg_l = jnp.sum(adj_rows, axis=1)
 
-        def step(carry, t):
-            phi_l, lam_l = carry
-            phi_star = _vbe_local(x_l, mask_l, phi_l, prior, n_nodes, K, D)
-            phi_all = jax.lax.all_gather(phi_l, axis, tiled=True)
-            neigh_sum = adj_rows @ phi_all
-            phi_hat = (phi_star - 2.0 * lam_l
-                       + rho * (deg_l[:, None] * phi_l + neigh_sum))
-            phi_hat = phi_hat / (1.0 + 2.0 * rho * deg_l)[:, None]
-            if project:
-                phi_new = jax.vmap(
-                    lambda p: expfam.project_to_domain(p, K, D))(phi_hat)
-            else:
-                phi_new = phi_hat
-            kappa = kappa_schedule(t.astype(phi_l.dtype) + 1.0, xi)
-            phi_new_all = jax.lax.all_gather(phi_new, axis, tiled=True)
-            resid = deg_l[:, None] * phi_new - adj_rows @ phi_new_all
-            lam_new = lam_l + kappa * rho / 2.0 * resid
-            return (phi_new, lam_new), None
+def run_vb_sharded(mesh: Mesh, model, data, topology, *, n_iters: int,
+                   axis: str = "data", **kw) -> engine.VBRun:
+    """Generic entry point: any ConjugateExpModel x topology on a mesh."""
+    return engine.run_vb(model, data, topology, n_iters=n_iters,
+                         executor=engine.MeshExecutor(mesh, axis), **kw)
 
-        (phi_l, _), _ = jax.lax.scan(step, (phi_l, lam_l),
-                                     jnp.arange(n_iters))
-        return phi_l
 
-    return run(x, mask, adj, phi0, lam0)
+__all__ = [
+    "ring_diffusion_combine", "run_dsvb_sharded", "run_dsvb_ring_sharded",
+    "run_admm_sharded", "run_vb_sharded",
+]

@@ -1,0 +1,425 @@
+"""Unified conjugate-exponential VB engine: Model x Topology x Executor.
+
+Every estimator in the paper is the same per-iteration kernel — each node
+runs a VBE step + local VBM optimum to get phi*_i (Eq. 18) — followed by a
+topology-specific rule for turning the stack {phi*_i} into the next iterate.
+This module owns that second half ONCE; `core/algorithms.py` (GMM),
+`core/linreg.py` (Normal-Gamma) and `core/distributed.py` (shard_map mesh
+runners) are thin wrappers over `run_vb`.
+
+Equation -> code map (the only implementations in the repo):
+
+* Eq. 20   fusion-centre average                `FusionCenter.combine`
+* Eq. 22/29 Robbins-Monro step size eta_t       `eta_schedule` / `Schedule`
+* Eq. 27a  natural-gradient step                `_CombineTopology.step`
+* Eq. 27b  diffusion combine                    `Diffusion.combine` /
+                                                `RingDiffusion.combine`
+                                                (`ring_combine*` collectives)
+* Eq. 38a  ADMM primal update                   `ADMMConsensus.step`
+* Eq. 38b  projection onto Omega                `ADMMConsensus.step` (via
+                                                `model.project_to_domain`)
+* Eq. 39   ADMM dual ascent                     `ADMMConsensus.step`
+* Eq. 40   kappa_t dual-step ramp               `kappa_schedule`
+* Eq. 46   KL performance metric                `kl_to_reference`
+* Eq. 47   nearest-neighbour weights            `network.nearest_neighbor_weights`
+                                                (ring case: `RingDiffusion`)
+
+Executors: the default executor runs the node axis as a plain array axis
+(whole runs jit + lax.scan); `MeshExecutor(mesh, axis)` runs the SAME step
+function under shard_map with the node axis sharded over a mesh axis, with
+each topology supplying its collective form (all_gather for arbitrary
+graphs, ppermute for the ICI ring, psum-mean for the fusion centre).
+Numerical equivalence of the two executors is asserted in the test-suite.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist import compat
+
+
+# ---------------------------------------------------------------------------
+# Step-size schedules (Eqs. 29 and 40)
+# ---------------------------------------------------------------------------
+def eta_schedule(t: jnp.ndarray, tau: float, d0: float = 1.0) -> jnp.ndarray:
+    """eta_t = 1 / (d0 + tau * t); satisfies Robbins-Monro (Eq. 22)."""
+    return 1.0 / (d0 + tau * t)
+
+
+def kappa_schedule(t: jnp.ndarray, xi: float = 0.05) -> jnp.ndarray:
+    """kappa_t = 1 - 1/(1 + xi t)^2 ramps the ADMM dual step (Eq. 40)."""
+    return 1.0 - 1.0 / (1.0 + xi * t) ** 2
+
+
+class Schedule(NamedTuple):
+    """eta_t used by the natural-gradient step (27a).
+
+    `eta_fixed=1.0` recovers the one-shot estimators (cVB / noncoop /
+    nsg-dVB), where the iterate jumps straight to (a combination of) the
+    local optima; `eta_fixed=None` is the paper's Robbins-Monro schedule.
+    """
+
+    tau: float = 0.2
+    d0: float = 1.0
+    eta_fixed: Optional[float] = None
+
+    def eta(self, t: jnp.ndarray) -> jnp.ndarray:
+        if self.eta_fixed is not None:
+            return jnp.asarray(self.eta_fixed, t.dtype)
+        return eta_schedule(t + 1.0, self.tau, self.d0)
+
+
+ONE_SHOT = Schedule(eta_fixed=1.0)
+
+
+# ---------------------------------------------------------------------------
+# Ring collectives (Eq. 27b on the TPU ICI ring) — shared by the mesh
+# executor AND the training-layer consensus optimiser (optim/consensus.py)
+# ---------------------------------------------------------------------------
+def _ring_perms(n: int):
+    fwd = [(i, (i + 1) % n) for i in range(n)]
+    bwd = [(i, (i - 1) % n) for i in range(n)]
+    return fwd, bwd
+
+
+def ring_neighbors(x: jnp.ndarray, axis_name: str):
+    """(x_{i-1}, x_{i+1}) along the mesh-axis ring, via two ppermutes."""
+    fwd, bwd = _ring_perms(compat.axis_size(axis_name))
+    return (jax.lax.ppermute(x, axis_name, fwd),
+            jax.lax.ppermute(x, axis_name, bwd))
+
+
+def ring_combine(x: jnp.ndarray, axis_name: str, w_self: float = 1.0 / 3.0,
+                 compute_dtype=None) -> jnp.ndarray:
+    """Eq. 27b with ring nearest-neighbour weights for ONE tensor per mesh
+    slot: x_i <- w_self x_i + w_n (x_{i-1} + x_{i+1}).  With w_self = 1/3
+    this is exactly Eq. 47 on a cycle graph.
+
+    `compute_dtype` upcasts AFTER the ppermutes, so the wire traffic stays
+    in the storage dtype (bf16 weights exchange bf16 bytes) while the
+    weighted sum accumulates at higher precision.
+    """
+    left, right = ring_neighbors(x, axis_name)
+    if compute_dtype is not None:
+        x, left, right = (a.astype(compute_dtype) for a in (x, left, right))
+    w_n = (1.0 - w_self) / 2.0
+    return w_self * x + w_n * (left + right)
+
+
+def ring_combine_block(varphi: jnp.ndarray, axis_name: str,
+                       w_self: float = 1.0 / 3.0) -> jnp.ndarray:
+    """Eq. 27b on a ring for a BLOCK of nodes per mesh slot (leading axis =
+    local nodes).  Interior neighbours are a local roll; only the two
+    boundary rows cross the ICI link (ppermute) — the minimal-traffic
+    neighbour exchange."""
+    fwd, bwd = _ring_perms(compat.axis_size(axis_name))
+    prev_tail = jax.lax.ppermute(varphi[-1:], axis_name, fwd)
+    next_head = jax.lax.ppermute(varphi[:1], axis_name, bwd)
+    shifted_right = jnp.concatenate([prev_tail, varphi[:-1]], 0)  # phi_{i-1}
+    shifted_left = jnp.concatenate([varphi[1:], next_head], 0)    # phi_{i+1}
+    w_n = (1.0 - w_self) / 2.0
+    return w_self * varphi + w_n * (shifted_right + shifted_left)
+
+
+# ---------------------------------------------------------------------------
+# Topologies / combiners
+# ---------------------------------------------------------------------------
+class _CombineTopology:
+    """Topologies of the form: (27a) varphi_i = phi_i + eta (phi*_i - phi_i),
+    then a linear combine of {varphi_i}.  Subclasses supply `combine`."""
+
+    uses_schedule = True
+
+    def shard_inputs(self) -> dict:
+        """Per-node arrays the mesh executor must shard along the node axis
+        (e.g. the rows of the combination-weight matrix)."""
+        return {}
+
+    def init_carry(self, phi0: jnp.ndarray):
+        return None
+
+    def combine(self, varphi, *, axis=None, local=None):
+        raise NotImplementedError
+
+    def step(self, model, phi, carry, phi_star, t, schedule: Schedule, *,
+             axis=None, local=None):
+        eta = schedule.eta(t.astype(phi.dtype))
+        if schedule.eta_fixed == 1.0:
+            varphi = phi_star                       # one-shot: jump to phi*
+        else:
+            varphi = phi + eta * (phi_star - phi)   # Eq. 27a
+        return self.combine(varphi, axis=axis, local=local), carry
+
+
+class FusionCenter(_CombineTopology):
+    """Centralised reference: phi <- mean_i phi*_i exactly (Eq. 20)."""
+
+    def combine(self, varphi, *, axis=None, local=None):
+        if axis is None:
+            mean = jnp.mean(varphi, axis=0)
+        else:
+            mean = jax.lax.pmean(jnp.mean(varphi, axis=0), axis)
+        return jnp.broadcast_to(mean, varphi.shape)
+
+
+class Isolated(_CombineTopology):
+    """No communication (noncoop-VB): every node keeps its own iterate."""
+
+    def combine(self, varphi, *, axis=None, local=None):
+        return varphi
+
+
+class Diffusion(_CombineTopology):
+    """Arbitrary-graph diffusion combine phi_i <- sum_j w_ij varphi_j
+    (Eq. 27b) with a row-stochastic weight matrix (e.g. Eq. 47)."""
+
+    def __init__(self, weights: jnp.ndarray):
+        self.weights = weights
+
+    def shard_inputs(self) -> dict:
+        return {"weights": self.weights}
+
+    def combine(self, varphi, *, axis=None, local=None):
+        if axis is None:
+            return self.weights @ varphi
+        # every node must see the messages addressed to it; on a mesh the
+        # collective realising that for an arbitrary graph is an all_gather
+        # followed by the local rows of W
+        varphi_all = jax.lax.all_gather(varphi, axis, tiled=True)
+        return local["weights"] @ varphi_all
+
+
+class RingDiffusion(_CombineTopology):
+    """Diffusion on the cycle graph — the TPU-native topology where the
+    communication graph IS the ICI ring along a mesh axis, so the combine
+    is two ppermutes and a weighted sum (no all_gather, no all_reduce)."""
+
+    def __init__(self, w_self: float = 1.0 / 3.0):
+        self.w_self = w_self
+
+    def combine(self, varphi, *, axis=None, local=None):
+        if axis is not None:
+            return ring_combine_block(varphi, axis, self.w_self)
+        w_n = (1.0 - self.w_self) / 2.0
+        return (self.w_self * varphi
+                + w_n * (jnp.roll(varphi, 1, axis=0)
+                         + jnp.roll(varphi, -1, axis=0)))
+
+
+class ADMMConsensus:
+    """Consensus ADMM in natural-parameter space (Algorithm 2).
+
+    Per iteration and node i with neighbours N_i (|N_i| = d_i):
+
+      (38a) phi_i <- [phi*_i - 2 lam_i + rho sum_{j in N_i}(phi_i + phi_j)]
+                     / (1 + 2 rho d_i)
+      (38b) phi_i <- Proj_Omega(phi_i)                  (if project=True)
+      (39)  lam_i <- lam_i + kappa_t rho/2 sum_{j in N_i}(phi_i - phi_j)
+      (40)  kappa_t = 1 - 1/(1 + xi t)^2
+
+    Algorithm 2 has no natural-gradient step, so `run_vb`'s `schedule` does
+    not apply to this topology (run_vb rejects a non-default one).
+    """
+
+    uses_schedule = False
+
+    def __init__(self, adj: jnp.ndarray, rho: float = 0.5, xi: float = 0.05,
+                 project: bool = True):
+        self.adj = adj
+        self.rho = rho
+        self.xi = xi
+        self.project = project
+
+    def shard_inputs(self) -> dict:
+        return {"adj": self.adj}
+
+    def init_carry(self, phi0: jnp.ndarray):
+        return jnp.zeros_like(phi0)                   # duals lambda_i
+
+    def step(self, model, phi, lam, phi_star, t, schedule: Schedule, *,
+             axis=None, local=None):
+        adj_rows = self.adj if axis is None else local["adj"]
+        deg = jnp.sum(adj_rows, axis=1)               # |N_i|
+
+        def neigh_sum(z):                             # sum_{j in N_i} z_j
+            if axis is None:
+                return adj_rows @ z
+            return adj_rows @ jax.lax.all_gather(z, axis, tiled=True)
+
+        # (38a) primal
+        phi_hat = (phi_star - 2.0 * lam
+                   + self.rho * (deg[:, None] * phi + neigh_sum(phi)))
+        phi_hat = phi_hat / (1.0 + 2.0 * self.rho * deg)[:, None]
+        if self.project:
+            phi_new = jax.vmap(model.project_to_domain)(phi_hat)  # (38b)
+        else:
+            phi_new = phi_hat
+        # (39) dual ascent with the kappa_t ramp (40)
+        kappa = kappa_schedule(t.astype(phi.dtype) + 1.0, self.xi)
+        resid = deg[:, None] * phi_new - neigh_sum(phi_new)
+        lam_new = lam + kappa * self.rho / 2.0 * resid
+        return phi_new, lam_new
+
+
+# ---------------------------------------------------------------------------
+# Metrics (Eq. 46) + run result
+# ---------------------------------------------------------------------------
+def kl_to_reference(model, phi_nodes: jnp.ndarray,
+                    ref_phi: Optional[jnp.ndarray]) -> jnp.ndarray:
+    """Per-node KL to the ground-truth posterior (Eq. 46).
+
+    `ref_phi` may be (P,) or a (n_refs, P) stack — e.g. component
+    permutations of a mixture reference — in which case the
+    permutation-invariant min-KL is reported.
+    """
+    if ref_phi is None:
+        return jnp.zeros(phi_nodes.shape[0], phi_nodes.dtype)
+    ref = ref_phi[None] if ref_phi.ndim == 1 else ref_phi
+    return jax.vmap(
+        lambda p: jnp.min(jax.vmap(lambda r: model.kl(p, r))(ref)))(phi_nodes)
+
+
+class VBRun(NamedTuple):
+    phi: jnp.ndarray            # (N, P) final natural parameters per node
+    kl_mean: jnp.ndarray        # (T,)   mean_i KL(q_i || ground truth)
+    kl_std: jnp.ndarray         # (T,)
+    kl_nodes: jnp.ndarray       # (T, N) per-node trajectory
+    consensus_err: Any = None   # (T,)   mean_i ||phi_i - mean_j phi_j||^2
+
+
+class MeshExecutor(NamedTuple):
+    """Run the node axis sharded over `axis` of `mesh` via shard_map."""
+
+    mesh: Any
+    axis: str = "data"
+
+
+# ---------------------------------------------------------------------------
+# The engine
+# ---------------------------------------------------------------------------
+def _scan_steps(model, data, topology, schedule, replication, ref_phi,
+                n_iters, phi0, carry0, *, axis=None, local=None,
+                diagnostics=True, metric_nodes=None):
+    """The per-iteration kernel, shared verbatim by both executors."""
+
+    def step(carry, t):
+        phi, aux = carry
+        phi_star = model.local_optimum(data, phi, replication)
+        phi_new, aux_new = topology.step(model, phi, aux, phi_star, t,
+                                         schedule, axis=axis, local=local)
+        phi_m = phi_new if metric_nodes is None else phi_new[:metric_nodes]
+        kl = kl_to_reference(model, phi_m, ref_phi)
+        if diagnostics:
+            mean = jnp.mean(phi_new, axis=0)
+            if axis is not None:
+                mean = jax.lax.pmean(mean, axis)
+            msd = jnp.mean((phi_new - mean) ** 2)
+            if axis is not None:
+                msd = jax.lax.pmean(msd, axis)
+        else:
+            msd = jnp.zeros((), phi_new.dtype)
+        return (phi_new, aux_new), (kl, msd)
+
+    (phi, _), (kls, msds) = jax.lax.scan(step, (phi0, carry0),
+                                         jnp.arange(n_iters))
+    return phi, kls, msds
+
+
+def run_vb(model, data, topology, *, n_iters: int,
+           schedule: Schedule = Schedule(), replication: float | None = None,
+           init_phi: Optional[jnp.ndarray] = None,
+           ref_phi: Optional[jnp.ndarray] = None,
+           executor: Optional[MeshExecutor] = None,
+           diagnostics: bool = True,
+           metric_nodes: Optional[int] = None) -> VBRun:
+    """Run distributed VB: `model` on `data` over `topology`.
+
+    Parameters
+    ----------
+    model : ConjugateExpModel (see core/model.py)
+    data : per-node data pytree; every leaf has leading node axis N
+    topology : FusionCenter | Isolated | Diffusion | RingDiffusion |
+        ADMMConsensus — how {phi*_i} becomes the next iterate
+    n_iters : number of VB iterations (the scan length)
+    schedule : eta_t of the natural-gradient step (27a); `ONE_SHOT` for the
+        jump-to-optimum estimators
+    replication : likelihood replication factor (paper App. A); defaults to
+        the network size N, use 1.0 for non-cooperative runs
+    init_phi : (N, P) initial naturals; defaults to the prior at every node
+    ref_phi : (P,) or (n_refs, P) reference for the Eq. 46 metric
+    executor : None = single-array (node axis is a plain array axis, whole
+        run jits); MeshExecutor(mesh, axis) = shard_map over a mesh axis
+    diagnostics : also record per-iteration consensus error
+    metric_nodes : evaluate the Eq. 46 metric on only the first
+        `metric_nodes` rows (kl_nodes becomes (T, metric_nodes)) — used by
+        cVB, whose iterates are identical across nodes.  Single-array
+        executor only.
+
+    Returns a `VBRun` regardless of executor; the two paths are numerically
+    equivalent (asserted in tests/test_engine.py).
+    """
+    if not getattr(topology, "uses_schedule", True) \
+            and schedule != Schedule():
+        raise ValueError(
+            f"{type(topology).__name__} has no natural-gradient step "
+            "(Eq. 27a); it ignores `schedule` — pass the default")
+    if executor is not None and metric_nodes is not None:
+        raise ValueError("metric_nodes is only supported on the "
+                         "single-array executor")
+    n_nodes = jax.tree_util.tree_leaves(data)[0].shape[0]
+    if replication is None:
+        replication = float(n_nodes)
+    if init_phi is None:
+        init_phi = jnp.broadcast_to(model.init_phi(),
+                                    (n_nodes, model.flat_dim))
+    carry0 = topology.init_carry(init_phi)
+
+    if executor is None:
+        phi, kls, msds = _scan_steps(
+            model, data, topology, schedule, replication, ref_phi,
+            n_iters, init_phi, carry0, diagnostics=diagnostics,
+            metric_nodes=metric_nodes)
+        return VBRun(phi=phi, kl_mean=jnp.mean(kls, 1),
+                     kl_std=jnp.std(kls, 1), kl_nodes=kls,
+                     consensus_err=msds if diagnostics else None)
+
+    return _run_vb_sharded(model, data, topology, schedule, replication,
+                           ref_phi, n_iters, init_phi, carry0,
+                           executor, diagnostics)
+
+
+def _run_vb_sharded(model, data, topology, schedule, replication, ref_phi,
+                    n_iters, init_phi, carry0, executor: MeshExecutor,
+                    diagnostics: bool) -> VBRun:
+    """shard_map executor: node axis sharded over `executor.axis`."""
+    mesh, axis = executor.mesh, executor.axis
+    from jax.sharding import PartitionSpec as P
+
+    local_inputs = topology.shard_inputs()          # dict of (N, ...) arrays
+    local_keys = tuple(sorted(local_inputs))
+    has_carry = carry0 is not None
+
+    node = P(axis)
+    data_specs = jax.tree_util.tree_map(lambda _: node, data)
+    carry_spec = node if has_carry else P()
+    in_specs = (data_specs, node, carry_spec) + (node,) * len(local_keys)
+    out_specs = (node, P(None, axis), P(None))
+
+    def run(data_l, phi_l, carry_l, *local_vals):
+        local = dict(zip(local_keys, local_vals))
+        phi, kls, msds = _scan_steps(
+            model, data_l, topology, schedule, replication, ref_phi,
+            n_iters, phi_l, carry_l if has_carry else None,
+            axis=axis, local=local, diagnostics=diagnostics)
+        return phi, kls, msds
+
+    fn = compat.shard_map(run, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_vma=False)
+    phi, kls, msds = fn(data, init_phi,
+                        carry0 if has_carry else jnp.zeros((), init_phi.dtype),
+                        *(local_inputs[k] for k in local_keys))
+    return VBRun(phi=phi, kl_mean=jnp.mean(kls, 1), kl_std=jnp.std(kls, 1),
+                 kl_nodes=kls, consensus_err=msds if diagnostics else None)

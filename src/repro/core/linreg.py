@@ -29,7 +29,7 @@ import jax
 import jax.numpy as jnp
 from jax.scipy.special import digamma, gammaln
 
-from repro.core.algorithms import eta_schedule, kappa_schedule
+from repro.core import engine
 
 
 class NGPosterior(NamedTuple):
@@ -126,43 +126,39 @@ def pooled_posterior(X_all, y_all, q0: NGPosterior) -> NGPosterior:
 
 
 # ---------------------------------------------------------------------------
-# Distributed estimators (no latents -> phi*_i constant across iterations;
-# the consensus dynamics are exactly the paper's Eqs. 27 / 38a+39)
+# Distributed estimators — engine wrappers.  No local latents means phi*_i
+# is constant across iterations, so the LinRegModel adapter treats the
+# precomputed (N, P) phi* stack as the per-node "data" and the engine runs
+# exactly the paper's consensus dynamics (Eqs. 27 / 38a+39) on it.  The
+# single implementation of those equations lives in core/engine.py.
 # ---------------------------------------------------------------------------
+def _fixed_point_model(phi_star: jnp.ndarray):
+    from repro.core import model as model_lib
+    return model_lib.LinRegModel.from_flat_dim(phi_star.shape[-1])
+
+
 def run_cvb(phi_star: jnp.ndarray) -> jnp.ndarray:
     """Eq. 20: fusion-centre average (exact in one step)."""
-    return jnp.mean(phi_star, axis=0)
+    return engine.FusionCenter().combine(phi_star)[0]
 
 
 def run_dsvb(phi_star, weights, *, n_iters: int, tau: float = 0.2,
              d0: float = 1.0):
     """Eq. 27 with fixed local optima; returns (N, P) final iterates.
     Nodes start at their own local optimum (noncoop state)."""
-    def step(phi, t):
-        eta = eta_schedule(t.astype(phi.dtype) + 1.0, tau, d0)
-        varphi = phi + eta * (phi_star - phi)
-        return weights @ varphi, None
-
-    phi, _ = jax.lax.scan(step, phi_star, jnp.arange(n_iters))
-    return phi
+    run = engine.run_vb(_fixed_point_model(phi_star), phi_star,
+                        engine.Diffusion(weights), n_iters=n_iters,
+                        schedule=engine.Schedule(tau=tau, d0=d0),
+                        init_phi=phi_star, diagnostics=False)
+    return run.phi
 
 
 def run_admm(phi_star, adj, *, n_iters: int, rho: float = 0.5,
              xi: float = 0.05):
     """Eqs. 38a + 39 with fixed local optima."""
-    deg = jnp.sum(adj, axis=1)
-    phi = phi_star
-    lam = jnp.zeros_like(phi_star)
-
-    def step(carry, t):
-        phi, lam = carry
-        neigh = adj @ phi
-        phi_new = (phi_star - 2.0 * lam
-                   + rho * (deg[:, None] * phi + neigh))
-        phi_new = phi_new / (1.0 + 2.0 * rho * deg)[:, None]
-        kap = kappa_schedule(t.astype(phi.dtype) + 1.0, xi)
-        resid = deg[:, None] * phi_new - adj @ phi_new
-        return (phi_new, lam + kap * rho / 2.0 * resid), None
-
-    (phi, _), _ = jax.lax.scan(step, (phi, lam), jnp.arange(n_iters))
-    return phi
+    run = engine.run_vb(_fixed_point_model(phi_star), phi_star,
+                        engine.ADMMConsensus(adj, rho=rho, xi=xi,
+                                             project=False),
+                        n_iters=n_iters, init_phi=phi_star,
+                        diagnostics=False)
+    return run.phi

@@ -1,0 +1,7 @@
+"""repro.dist — mesh/sharding utilities shared by training and serving.
+
+`sharding` holds the PartitionSpec policy (which tensor dims go on which
+mesh axes); `compat` smooths over JAX API differences so the same call
+sites work on the pinned container JAX and on newer releases.
+"""
+from repro.dist import compat, sharding  # noqa: F401

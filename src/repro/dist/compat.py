@@ -1,0 +1,144 @@
+"""JAX version compatibility for mesh + shard_map entry points.
+
+The codebase targets the modern spelling (``jax.shard_map`` with
+``axis_names=``/``check_vma=``, ``jax.set_mesh`` as a context manager,
+``jax.sharding.get_abstract_mesh``).  The pinned container ships an older
+JAX where the same functionality lives under ``jax.experimental.shard_map``
+(with ``auto=``/``check_rep=``) and there is no ambient-mesh setter beyond
+``with mesh:``.  Every mesh-aware call site goes through this module so the
+rest of the code can be written once.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax
+
+try:  # modern JAX
+    _native_shard_map = jax.shard_map  # type: ignore[attr-defined]
+    _HAS_NATIVE = True
+except AttributeError:
+    from jax.experimental.shard_map import shard_map as _exp_shard_map
+    _HAS_NATIVE = False
+
+# Partial-manual shard_map (manual over a subset of mesh axes, the rest
+# auto/GSPMD) trips an XLA SPMD-partitioner CHECK on older JAX; callers that
+# can fall back to fully-manual should consult this flag.
+PARTIAL_MANUAL_OK = _HAS_NATIVE
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, axis_names=None,
+              check_vma=None, check_rep=None):
+    """``jax.shard_map`` with the modern kwargs on any supported JAX.
+
+    ``axis_names`` marks the manual axes (the rest stay auto/GSPMD);
+    ``check_vma`` is the new name of ``check_rep``.
+    """
+    names = (frozenset(axis_names) if axis_names is not None
+             else frozenset(mesh.axis_names))
+
+    def wrapped(*args):
+        with manual_axes(names):
+            return f(*args)
+
+    if _HAS_NATIVE:
+        kw = {}
+        if axis_names is not None:
+            kw["axis_names"] = set(axis_names)
+        if check_vma is not None:
+            kw["check_vma"] = check_vma
+        elif check_rep is not None:
+            kw["check_vma"] = check_rep
+        return _native_shard_map(wrapped, mesh=mesh, in_specs=in_specs,
+                                 out_specs=out_specs, **kw)
+    kw = {}
+    auto = frozenset(mesh.axis_names) - names
+    if auto:
+        kw["auto"] = auto
+    flag = check_vma if check_vma is not None else check_rep
+    if flag is not None:
+        kw["check_rep"] = flag
+    return _exp_shard_map(wrapped, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Ambient mesh (jax.set_mesh replacement)
+# ---------------------------------------------------------------------------
+class _MeshState(threading.local):
+    def __init__(self):
+        self.stack = []          # meshes entered via use_mesh
+        self.manual = []         # frozensets of manual axis names
+
+
+_STATE = _MeshState()
+
+
+@contextlib.contextmanager
+def use_mesh(mesh):
+    """Ambient-mesh context: the portable spelling of ``jax.set_mesh``.
+
+    Also enters ``with mesh:`` so bare-PartitionSpec sharding constraints
+    resolve on older JAX.
+    """
+    _STATE.stack.append(mesh)
+    try:
+        with mesh:
+            yield mesh
+    finally:
+        _STATE.stack.pop()
+
+
+@contextlib.contextmanager
+def manual_axes(names):
+    """Record that `names` are manual (shard_map) axes for the enclosed
+    trace, so sharding constraints skip them."""
+    _STATE.manual.append(frozenset(names))
+    try:
+        yield
+    finally:
+        _STATE.manual.pop()
+
+
+def current_mesh():
+    """The ambient mesh, or None.  Sources: use_mesh() stack, then the
+    thread-resources env populated by a plain ``with mesh:`` block."""
+    if _STATE.stack:
+        return _STATE.stack[-1]
+    try:
+        from jax._src import mesh as mesh_lib
+        pm = mesh_lib.thread_resources.env.physical_mesh
+        if pm is not None and not pm.empty:
+            return pm
+    except Exception:
+        pass
+    return None
+
+
+def current_manual_axes() -> frozenset:
+    if _STATE.manual:
+        return frozenset().union(*_STATE.manual)
+    return frozenset()
+
+
+def axis_sizes(mesh) -> dict:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def axis_size(axis_name: str) -> int:
+    """Static size of a named (shard_map) axis, on any supported JAX."""
+    try:
+        return jax.lax.axis_size(axis_name)  # type: ignore[attr-defined]
+    except AttributeError:
+        from jax._src import core as _core
+        return _core.axis_frame(axis_name)
+
+
+def auto_axis_sizes() -> dict:
+    """name -> size for ambient mesh axes NOT currently manual."""
+    mesh = current_mesh()
+    if mesh is None:
+        return {}
+    manual = current_manual_axes()
+    return {a: s for a, s in axis_sizes(mesh).items() if a not in manual}

@@ -1,0 +1,125 @@
+"""Partitioning policy: which tensor dims land on which mesh axes.
+
+One rule set shared by training, serving and the dry-run lowering:
+
+* an optional leading **replica** axis (consensus data-parallel state) maps
+  to ``replica_axis``;
+* leading **scan** axes (the stacked-layer axis of homogeneous models) are
+  never sharded;
+* the **last** divisible payload dim takes ``"model"`` (tensor parallel);
+* with ``fsdp=True`` the first remaining divisible payload dim takes
+  ``"data"`` (ZeRO-3 style parameter sharding);
+* anything indivisible replicates.
+
+Also provides the activation sharding-constraint helpers
+(`constrain_batch_dim`, `constrain_last_dim_model`) used inside model
+forward passes to stop GSPMD drifting to replicated layouts, and
+`batch_spec` for input batches.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.dist import compat
+
+
+def _axis_size(mesh: Mesh, name: str) -> int:
+    return compat.axis_sizes(mesh).get(name, 1)
+
+
+def spec_for(shape, mesh: Mesh, *, fsdp: bool = False, n_scan_axes: int = 0,
+             replica_axis: str | None = None) -> P:
+    """PartitionSpec for a parameter of `shape` under the policy above."""
+    rank = len(shape)
+    spec: list = [None] * rank
+    lead = 0
+    if replica_axis is not None and rank > 0:
+        spec[0] = replica_axis
+        lead = 1
+    lead += n_scan_axes
+    model_size = _axis_size(mesh, "model")
+    data_size = _axis_size(mesh, "data")
+
+    model_dim = None
+    if model_size > 1:
+        for ax in range(rank - 1, lead - 1, -1):
+            if shape[ax] % model_size == 0 and shape[ax] >= 2 * model_size:
+                model_dim = ax
+                spec[ax] = "model"
+                break
+    if fsdp and data_size > 1 and replica_axis != "data":
+        for ax in range(lead, rank):
+            if ax == model_dim:
+                continue
+            if shape[ax] % data_size == 0 and shape[ax] >= 2 * data_size:
+                spec[ax] = "data"
+                break
+    return P(*spec)
+
+
+def param_shardings(tree, mesh: Mesh, *, fsdp: bool = False,
+                    scanned: bool = False, replica_axis: str | None = None,
+                    no_fsdp_keys: tuple = ()):
+    """NamedSharding pytree for a parameter (or optimizer-moment) tree.
+
+    `scanned` marks one leading stacked-layer axis on every leaf (after the
+    replica axis, if any).  Leaves whose path contains a key in
+    `no_fsdp_keys` opt out of fsdp (e.g. locally-dispatched MoE experts).
+    """
+    n_scan = 1 if scanned else 0
+
+    def one(path, leaf):
+        keys = {getattr(k, "key", getattr(k, "name", None)) for k in path}
+        use_fsdp = fsdp and not (keys & set(no_fsdp_keys))
+        return NamedSharding(mesh, spec_for(
+            leaf.shape, mesh, fsdp=use_fsdp, n_scan_axes=n_scan,
+            replica_axis=replica_axis))
+
+    return jax.tree_util.tree_map_with_path(one, tree)
+
+
+def batch_spec(mesh: Mesh) -> P:
+    """Batch-dim spec: shard dim 0 over whichever of (pod, data) exist."""
+    axes = tuple(a for a in ("pod", "data")
+                 if a in mesh.axis_names and _axis_size(mesh, a) > 1)
+    return P(axes) if axes else P()
+
+
+# ---------------------------------------------------------------------------
+# Activation sharding constraints (no-ops without an ambient mesh, and on
+# axes that are manual inside a shard_map body)
+# ---------------------------------------------------------------------------
+def _dp_axes_for(batch: int) -> tuple:
+    sizes = compat.auto_axis_sizes()
+    axes, rem = [], batch
+    for a in ("pod", "data"):
+        s = sizes.get(a, 1)
+        if s > 1 and rem % s == 0:
+            axes.append(a)
+            rem //= s
+    return tuple(axes)
+
+
+def constrain_batch_dim(x):
+    """Re-assert that dim 0 (batch) is sharded over the data-parallel axes."""
+    mesh = compat.current_mesh()
+    if mesh is None or compat.current_manual_axes():
+        return x
+    axes = _dp_axes_for(x.shape[0])
+    if not axes:
+        return x
+    spec = P(axes, *([None] * (x.ndim - 1)))
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def constrain_last_dim_model(x):
+    """Pin the trailing dim to the "model" axis (head_dim-sharded paths)."""
+    mesh = compat.current_mesh()
+    if mesh is None or compat.current_manual_axes():
+        return x
+    sizes = compat.auto_axis_sizes()
+    if sizes.get("model", 1) <= 1 or x.shape[-1] % sizes["model"] != 0:
+        return x
+    spec = P(*([None] * (x.ndim - 1)), "model")
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

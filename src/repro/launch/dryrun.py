@@ -24,7 +24,8 @@ def _lower_compile(cfg, shape, mesh, dp_mode, consensus_axis, use_kernels):
     fn, in_specs = specs.build_step(cfg, shape, mesh, dp_mode=dp_mode,
                                     consensus_axis=consensus_axis,
                                     use_kernels=use_kernels)
-    with jax.set_mesh(mesh):
+    from repro.dist import compat
+    with compat.use_mesh(mesh):
         lowered = jax.jit(fn).lower(**in_specs)
         compiled = lowered.compile()
     return compiled

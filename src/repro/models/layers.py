@@ -238,9 +238,8 @@ def attention_decode(x, p, cfg: ModelConfig, cache_k, cache_v, pos, *,
         cache_v, v.astype(cache_v.dtype), (0, slot, 0, 0))
     g = cfg.n_heads // cfg.n_kv_heads
     qg = q.reshape(B, 1, cfg.n_kv_heads, g, cfg.hd)
-    mesh = jax.sharding.get_abstract_mesh()
-    model_ax = (dict(zip(mesh.axis_names, mesh.axis_sizes)).get("model", 1)
-                if mesh is not None and mesh.axis_names else 1)
+    from repro.dist import compat
+    model_ax = compat.auto_axis_sizes().get("model", 1)
     if model_ax > 1 and cfg.n_kv_heads % model_ax != 0:
         # kv heads not model-shardable -> the cache is head_dim-sharded
         # (engine.cache_shardings); align q's hd axis with it so the QK^T

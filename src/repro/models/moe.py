@@ -36,18 +36,20 @@ def moe_block(x: jnp.ndarray, p, cfg: ModelConfig):
     zero cross-shard dispatch traffic); expert FFN weights stay
     model-sharded via the auto axes.
     """
-    mesh = jax.sharding.get_abstract_mesh()
-    if cfg.moe_local_dispatch and mesh is not None and mesh.axis_names:
+    from repro.dist import compat
+    mesh = compat.current_mesh()
+    if cfg.moe_local_dispatch and mesh is not None:
         import functools
         from jax.sharding import PartitionSpec as P
-        sizes = dict(zip(mesh.axis_names, mesh.axis_sizes))
-        types = dict(zip(mesh.axis_names, mesh.axis_types))
+        sizes = compat.auto_axis_sizes()
         axes = tuple(a for a in ("pod", "data")
-                     if a in sizes and sizes[a] > 1
-                     and str(types[a]) == "Auto"
+                     if sizes.get(a, 1) > 1
                      and x.shape[0] % sizes[a] == 0)
-        if axes:
-            fn = jax.shard_map(
+        # local dispatch leaves the expert weights on auto (GSPMD) axes, a
+        # partial-manual shard_map — hard XLA CHECK failure on older JAX,
+        # so fall back to global dispatch there
+        if axes and compat.PARTIAL_MANUAL_OK:
+            fn = compat.shard_map(
                 functools.partial(_moe_dispatch, cfg=cfg,
                                   axis_names=axes),
                 mesh=mesh, axis_names=set(axes),

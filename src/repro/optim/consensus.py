@@ -27,29 +27,23 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core.engine import ring_combine, ring_neighbors
+from repro.dist import compat
 
-def _ring_neighbors(x: jnp.ndarray, axis: str):
-    """(x_{i-1}, x_{i+1}) along the manual mesh axis ring."""
-    n = jax.lax.axis_size(axis)
-    fwd = [(i, (i + 1) % n) for i in range(n)]
-    bwd = [(i, (i - 1) % n) for i in range(n)]
-    return (jax.lax.ppermute(x, axis, fwd), jax.lax.ppermute(x, axis, bwd))
+_ring_neighbors = ring_neighbors   # backward-compatible alias
 
 
 def ring_size(axis: str) -> int:
-    return jax.lax.axis_size(axis)
+    return compat.axis_size(axis)
 
 
 # ---------------------------------------------------------------------------
 # dSVB-style diffusion (Eq. 27b with nearest-neighbour weights on a ring)
+# — per-tensor form of the engine's RingDiffusion primitive
 # ---------------------------------------------------------------------------
 def diffusion_combine(params, axis: str, w_self: float = 1.0 / 3.0):
     def comb(p):
-        left, right = _ring_neighbors(p, axis)
-        w_n = (1.0 - w_self) / 2.0
-        pf = p.astype(jnp.float32)
-        out = w_self * pf + w_n * (left.astype(jnp.float32) +
-                                   right.astype(jnp.float32))
+        out = ring_combine(p, axis, w_self, compute_dtype=jnp.float32)
         return out.astype(p.dtype)
 
     return jax.tree.map(comb, params)

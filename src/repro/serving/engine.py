@@ -17,7 +17,7 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ModelConfig
-from repro.dist import sharding
+from repro.dist import compat, sharding  # noqa: F401  (sharding: policy API)
 from repro.models import model as model_lib
 
 
@@ -111,7 +111,7 @@ class Engine:
         max_new = max(r.max_new_tokens for r in requests)
         total = min(self.max_seq, plen + max_new)
 
-        with jax.set_mesh(self.mesh):
+        with compat.use_mesh(self.mesh):
             logits, cache = self._prefill(self.params, jnp.asarray(toks),
                                           frontend)
             # re-home the prefill cache into a full-length decode cache

@@ -23,7 +23,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ModelConfig
-from repro.dist import sharding
+from repro.dist import compat, sharding
 from repro.models import model as model_lib
 from repro.optim import adamw, consensus, schedules
 
@@ -205,9 +205,14 @@ def _consensus_step(cfg, mesh: Mesh, dp_mode: str, axis: str, hyper,
         out_specs = (in_specs[0], in_specs[1], in_specs[2],
                      leaf_specs({"loss": 0, "ce": 0, "grad_norm": 0, "lr": 0,
                                  "consensus_residual": 0}, rep))
-        fn = jax.shard_map(inner, mesh=mesh, axis_names={axis},
-                           in_specs=in_specs, out_specs=out_specs,
-                           check_vma=False)
+        # Partial-manual (auto "model" axis) where supported; otherwise run
+        # fully manual — params replicate over "model" inside the body,
+        # which is numerically identical (redundant compute per model
+        # shard) and avoids the old-XLA partitioner CHECK.
+        names = {axis} if compat.PARTIAL_MANUAL_OK else None
+        fn = compat.shard_map(inner, mesh=mesh, axis_names=names,
+                              in_specs=in_specs, out_specs=out_specs,
+                              check_vma=False)
         p, o, d, metrics = fn(state.params, state.opt, state.duals,
                               state.step, batch)
         return TrainState(p, o, d, state.step + 1), metrics

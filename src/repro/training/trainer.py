@@ -9,6 +9,7 @@ import numpy as np
 
 from repro import checkpoint
 from repro.configs.base import ModelConfig
+from repro.dist import compat
 from repro.data.tokens import Batcher
 from repro.training import train_step as ts
 
@@ -40,7 +41,7 @@ class Trainer:
         self.history: list[dict] = []
 
     def run(self, n_steps: int, log_every: int = 10) -> list[dict]:
-        with jax.set_mesh(self.mesh):
+        with compat.use_mesh(self.mesh):
             t0 = time.time()
             for i in range(n_steps):
                 batch = jax.device_put(self.batcher.next_batch(),

@@ -52,6 +52,7 @@ def test_sharded_runners_match_dense(subproc):
 CODE_CONSENSUS = r"""
 import jax, jax.numpy as jnp, numpy as np, functools
 from jax.sharding import PartitionSpec as P
+from repro.dist import compat
 from repro.optim import consensus
 from repro.core import network
 
@@ -60,7 +61,7 @@ n = 8
 params = {"w": jnp.arange(8.0 * 3).reshape(8, 3),
           "b": jnp.linspace(0, 1, 8)[:, None] * jnp.ones((8, 2))}
 
-@functools.partial(jax.shard_map, mesh=mesh, in_specs=P("data"),
+@functools.partial(compat.shard_map, mesh=mesh, in_specs=P("data"),
                    out_specs=P("data"))
 def combine(p):
     local = jax.tree.map(lambda a: a[0], p)
@@ -74,7 +75,8 @@ for k in params:
     np.testing.assert_allclose(np.asarray(got[k]), want, atol=1e-6)
 
 # ADMM duals: lambda stays antisymmetric-aggregated => sum_i lambda_i == 0
-@functools.partial(jax.shard_map, mesh=mesh, in_specs=(P("data"), P("data")),
+@functools.partial(compat.shard_map, mesh=mesh,
+                   in_specs=(P("data"), P("data")),
                    out_specs=(P("data"), P("data")))
 def admm(p_star, p_prev):
     ps = jax.tree.map(lambda a: a[0], p_star)
@@ -100,6 +102,7 @@ def test_consensus_optim_ring_math(subproc):
 CODE_TRAIN_MODES = r"""
 import jax, jax.numpy as jnp
 from repro.configs.base import ModelConfig
+from repro.dist import compat
 from repro.training import train_step as ts
 
 cfg = ModelConfig(name="tiny", arch_type="dense", n_layers=2, d_model=64,
@@ -109,7 +112,7 @@ mesh = jax.make_mesh((4, 2), ("data", "model"))
 key = jax.random.PRNGKey(0)
 batch = {"tokens": jax.random.randint(key, (8, 32), 0, 128)}
 losses = {}
-with jax.set_mesh(mesh):
+with compat.use_mesh(mesh):
     for mode in ["allreduce", "diffusion", "admm"]:
         axis = "data" if mode != "allreduce" else None
         state = ts.init_state(cfg, key, dp_mode=mode, n_replicas=4)

@@ -3,7 +3,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="hypothesis not available in this environment")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import expfam
 

@@ -61,6 +61,7 @@ def test_extrapolation_linear():
 CODE_TINY_DRYRUN = r"""
 import jax, jax.numpy as jnp, functools
 from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.dist import compat
 from repro.launch import hlo_analysis as ha
 
 mesh = jax.make_mesh((2, 2), ("data", "model"))
@@ -72,7 +73,7 @@ x_sds = jax.ShapeDtypeStruct((8, 64), jnp.float32,
 def f(x, w):
     return jnp.sum(x @ w)
 
-with jax.set_mesh(mesh):
+with compat.use_mesh(mesh):
     compiled = jax.jit(f).lower(x_sds, w_sds).compile()
 r = ha.analyze(compiled, 4, model_flops=2 * 8 * 64 * 64)
 assert r.flops > 0

@@ -11,6 +11,7 @@ import numpy as np
 import pytest
 
 from repro.configs.base import ARCH_IDS, get_smoke_config
+from repro.dist import compat
 from repro.models import model
 from repro.training import train_step as ts
 
@@ -43,7 +44,7 @@ def test_smoke_forward_and_train_step(arch):
     state = ts.init_state(cfg, key)
     hyper = ts.TrainHyper(warmup=0, peak_lr=1e-3)
     step = jax.jit(ts.make_train_step(cfg, mesh, hyper=hyper))
-    with jax.set_mesh(mesh):
+    with compat.use_mesh(mesh):
         state2, metrics = step(state, batch)
     assert np.isfinite(float(metrics["loss"]))
     assert not bool(jnp.any(jnp.isnan(

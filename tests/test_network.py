@@ -1,7 +1,11 @@
 """Graph / combination-weight properties."""
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="hypothesis not available in this environment")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import network
 
