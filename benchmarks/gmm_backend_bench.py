@@ -1,0 +1,64 @@
+"""End-to-end GMM engine-iteration benchmark: reference vs fused backend.
+
+Runs the SAME `engine.run_vb` dSVB loop on the paper's sensor config
+(reduced sizes by default) with each compute backend and reports
+us/iteration plus the reference/fused speedup and the final-phi parity.
+
+On this CPU container the fused path executes the Pallas kernel body in
+interpret mode, so the speedup number here is a *parity + plumbing* signal
+(interpret-mode timings are not TPU-representative in either direction);
+on a TPU backend the same call compiles to Mosaic and the row becomes the
+real hot-path speedup.  The JSON emitted via `run.py --json` keeps both
+rows so the perf trajectory is tracked either way.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import engine, expfam, network
+from repro.core import model as model_lib
+from repro.data import synthetic
+
+from benchmarks import common
+
+K, D = 3, 2
+
+
+def run(full=False):
+    n_nodes = 50 if full else 16
+    n_per = 100 if full else 60
+    n_iters = 200 if full else 60
+    data = synthetic.paper_synthetic(n_nodes=n_nodes, n_per_node=n_per,
+                                     seed=1, dtype=np.float32)
+    prior = expfam.noninformative_prior(K, D, beta0=0.1, w0_scale=10.0,
+                                        dtype=jnp.float32)
+    adj, _ = network.random_geometric_graph(n_nodes, seed=3)
+    W = network.nearest_neighbor_weights(adj).astype(jnp.float32)
+    mdl = model_lib.GMMModel(prior, K, D)
+    topo = engine.Diffusion(W)
+
+    runs, rows = {}, []
+    for backend in ("reference", "fused"):
+        fn = jax.jit(lambda x, m, b=backend: engine.run_vb(
+            mdl, (x, m), topo, n_iters=n_iters, backend=b).phi)
+        fn(data.x, data.mask)                       # compile
+        out, wall = common.timed(fn, data.x, data.mask)
+        runs[backend] = out
+        rows.append((f"backend_{backend}_engine",
+                     common.us_per_iter(wall, n_iters),
+                     f"n_nodes={n_nodes} n_iters={n_iters}"))
+    err = float(jnp.max(jnp.abs(runs["reference"] - runs["fused"])
+                        / (jnp.abs(runs["reference"]) + 1.0)))
+    speedup = rows[0][1] / max(rows[1][1], 1e-9)
+    interp = jax.default_backend() != "tpu"
+    rows.append(("backend_speedup", rows[1][1],
+                 f"ref/fused={speedup:.2f}x interpret={interp} "
+                 f"max_rel_phi_err={err:.1e}"))
+    common.save("gmm_backend_bench", {
+        "us_per_iter_reference": rows[0][1], "us_per_iter_fused": rows[1][1],
+        "speedup_ref_over_fused": speedup, "interpret_mode": interp,
+        "max_rel_phi_err": err, "n_nodes": n_nodes, "n_iters": n_iters})
+    assert err < 1e-3, f"backend parity broken: {err}"
+    return rows

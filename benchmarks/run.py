@@ -1,11 +1,18 @@
 """Benchmark harness — one function per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV rows.  ``--full`` restores the
-paper's exact experiment sizes (50 nodes, 2000-3000 iterations, 300 MC
-trials are NOT replicated — see DESIGN.md §7); default settings are
-reduced-but-faithful for the CPU container.
+paper's exact experiment sizes (50 nodes, 2000-3000 iterations; the 300 MC
+trials are NOT replicated — see README "Quickstart" / EXPERIMENTS.md);
+default settings are reduced-but-faithful for the CPU container.
+
+``--json PATH`` additionally emits a machine-readable snapshot
+(``BENCH_engine.json`` in CI): ``{name: {us_per_call, derived}}`` plus a
+``failed`` list, so the perf trajectory is tracked across PRs.  ``--only``
+matches comma-separated prefixes against either the benchmark name or its
+group (``paper_fig`` selects every fig*/table* reproduction).
 """
 import argparse
+import json
 import os
 import sys
 import traceback
@@ -22,32 +29,44 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default=None,
-                    help="comma-separated benchmark-name prefixes")
+                    help="comma-separated benchmark-name or group prefixes")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write {name: {us_per_call, derived}} JSON")
     args, _ = ap.parse_known_args()
 
-    from benchmarks import consensus_bench, kernel_bench, linreg_bench, \
-        paper_figures, roofline, weights_ablation
-    benches = ([(f.__name__, f) for f in paper_figures.ALL]
-               + [("weights_ablation", weights_ablation.run),
-                  ("linreg_generality", linreg_bench.run),
-                  ("kernel_bench", kernel_bench.run),
-                  ("consensus_lm", consensus_bench.run),
-                  ("roofline", roofline.run)])
+    from benchmarks import consensus_bench, gmm_backend_bench, kernel_bench, \
+        linreg_bench, paper_figures, roofline, weights_ablation
+    # (group, name, fn) — group is an --only alias for a family of benches
+    benches = ([("paper_fig", f.__name__, f) for f in paper_figures.ALL]
+               + [("weights_ablation", "weights_ablation",
+                   weights_ablation.run),
+                  ("linreg_generality", "linreg_generality",
+                   linreg_bench.run),
+                  ("kernel_bench", "kernel_bench", kernel_bench.run),
+                  ("gmm_backend", "gmm_backend", gmm_backend_bench.run),
+                  ("consensus_lm", "consensus_lm", consensus_bench.run),
+                  ("roofline", "roofline", roofline.run)])
     if args.only:
         pre = tuple(args.only.split(","))
-        benches = [b for b in benches if b[0].startswith(pre)]
+        benches = [b for b in benches
+                   if b[0].startswith(pre) or b[1].startswith(pre)]
 
     print("name,us_per_call,derived")
-    failed = 0
-    for bname, bench in benches:
+    results, failed = {}, []
+    for _group, bname, bench in benches:
         try:
             for name, us, derived in bench(full=args.full):
                 print(f"{name},{us:.1f},{derived}")
                 sys.stdout.flush()
+                results[name] = {"us_per_call": us, "derived": derived}
         except Exception:
-            failed += 1
+            failed.append(bname)
             print(f"{bname},nan,FAILED")
             traceback.print_exc()
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"results": results, "failed": failed}, f, indent=1,
+                      default=float)
     if failed:
         raise SystemExit(1)
 

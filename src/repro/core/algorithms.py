@@ -47,8 +47,9 @@ def _perturbed_init(prior: GMMPosterior, x: jnp.ndarray, key,
 
 
 def _gmm_run(x, mask, prior, topology, schedule, *, n_iters, K, D,
-             replication=None, ref_phi=None, init_q=None, metric_nodes=None):
-    mdl = model_lib.GMMModel(prior, K, D)
+             replication=None, ref_phi=None, init_q=None, metric_nodes=None,
+             backend=None):
+    mdl = model_lib.GMMModel(prior, K, D, backend=backend)
     phi0 = _init_phi(prior if init_q is None else init_q, x.shape[0])
     return engine.run_vb(mdl, (x, mask), topology, n_iters=n_iters,
                          schedule=schedule, replication=replication,
@@ -59,14 +60,16 @@ def _gmm_run(x, mask, prior, topology, schedule, *, n_iters, K, D,
 # ---------------------------------------------------------------------------
 # cVB — centralised reference (fusion centre computes Eq. 20 exactly)
 # ---------------------------------------------------------------------------
-@functools.partial(jax.jit, static_argnames=("n_iters", "K", "D"))
+@functools.partial(jax.jit,
+                   static_argnames=("n_iters", "K", "D", "backend"))
 def run_cvb(x, mask, prior: GMMPosterior, *, n_iters: int, K: int, D: int,
-            ref_phi=None, init_q: GMMPosterior | None = None) -> VBRun:
+            ref_phi=None, init_q: GMMPosterior | None = None,
+            backend=None) -> VBRun:
     # all nodes share the fusion-centre iterate: evaluate the Eq. 46 metric
     # on one representative node and report zero spread (kl_nodes is (T, 1))
     run = _gmm_run(x, mask, prior, engine.FusionCenter(), engine.ONE_SHOT,
                    n_iters=n_iters, K=K, D=D, ref_phi=ref_phi,
-                   init_q=init_q, metric_nodes=1)
+                   init_q=init_q, metric_nodes=1, backend=backend)
     return VBRun(phi=run.phi, kl_mean=run.kl_nodes[:, 0],
                  kl_std=jnp.zeros(n_iters, run.phi.dtype),
                  kl_nodes=run.kl_nodes,
@@ -76,51 +79,60 @@ def run_cvb(x, mask, prior: GMMPosterior, *, n_iters: int, K: int, D: int,
 # ---------------------------------------------------------------------------
 # noncoop-VB — isolated nodes, unreplicated local data
 # ---------------------------------------------------------------------------
-@functools.partial(jax.jit, static_argnames=("n_iters", "K", "D"))
+@functools.partial(jax.jit,
+                   static_argnames=("n_iters", "K", "D", "backend"))
 def run_noncoop(x, mask, prior: GMMPosterior, *, n_iters: int, K: int, D: int,
-                ref_phi=None, init_q: GMMPosterior | None = None) -> VBRun:
+                ref_phi=None, init_q: GMMPosterior | None = None,
+                backend=None) -> VBRun:
     return _gmm_run(x, mask, prior, engine.Isolated(), engine.ONE_SHOT,
                     n_iters=n_iters, K=K, D=D, replication=1.0,
-                    ref_phi=ref_phi, init_q=init_q)
+                    ref_phi=ref_phi, init_q=init_q, backend=backend)
 
 
 # ---------------------------------------------------------------------------
 # nsg-dVB — one-step averaging of local optima (the Sec. III-A strawman)
 # ---------------------------------------------------------------------------
-@functools.partial(jax.jit, static_argnames=("n_iters", "K", "D"))
+@functools.partial(jax.jit,
+                   static_argnames=("n_iters", "K", "D", "backend"))
 def run_nsg_dvb(x, mask, weights, prior: GMMPosterior, *, n_iters: int,
                 K: int, D: int, ref_phi=None,
-                init_q: GMMPosterior | None = None) -> VBRun:
+                init_q: GMMPosterior | None = None, backend=None) -> VBRun:
     return _gmm_run(x, mask, prior, engine.Diffusion(weights),
                     engine.ONE_SHOT, n_iters=n_iters, K=K, D=D,
-                    ref_phi=ref_phi, init_q=init_q)
+                    ref_phi=ref_phi, init_q=init_q, backend=backend)
 
 
 # ---------------------------------------------------------------------------
 # dSVB — Algorithm 1 (stochastic natural gradient + diffusion)
 # ---------------------------------------------------------------------------
-@functools.partial(jax.jit, static_argnames=("n_iters", "K", "D"))
+@functools.partial(jax.jit,
+                   static_argnames=("n_iters", "K", "D", "backend"))
 def run_dsvb(x, mask, weights, prior: GMMPosterior, *, n_iters: int,
              K: int, D: int, tau: float = 0.2, d0: float = 1.0,
-             ref_phi=None, init_q: GMMPosterior | None = None) -> VBRun:
+             ref_phi=None, init_q: GMMPosterior | None = None,
+             backend=None) -> VBRun:
     return _gmm_run(x, mask, prior, engine.Diffusion(weights),
                     engine.Schedule(tau=tau, d0=d0), n_iters=n_iters,
-                    K=K, D=D, ref_phi=ref_phi, init_q=init_q)
+                    K=K, D=D, ref_phi=ref_phi, init_q=init_q,
+                    backend=backend)
 
 
 # ---------------------------------------------------------------------------
 # dVB-ADMM — Algorithm 2 (consensus ADMM in natural-parameter space)
 # ---------------------------------------------------------------------------
 @functools.partial(jax.jit,
-                   static_argnames=("n_iters", "K", "D", "project"))
+                   static_argnames=("n_iters", "K", "D", "project",
+                                    "backend"))
 def run_dvb_admm(x, mask, adj, prior: GMMPosterior, *, n_iters: int,
                  K: int, D: int, rho: float = 0.5, xi: float = 0.05,
-                 project: bool = True, ref_phi=None,
-                 init_q: GMMPosterior | None = None) -> VBRun:
-    topology = engine.ADMMConsensus(adj, rho=rho, xi=xi, project=project)
+                 project: bool = True, lam_max: float | None = None,
+                 ref_phi=None, init_q: GMMPosterior | None = None,
+                 backend=None) -> VBRun:
+    topology = engine.ADMMConsensus(adj, rho=rho, xi=xi, project=project,
+                                    lam_max=lam_max)
     return _gmm_run(x, mask, prior, topology, engine.Schedule(),
                     n_iters=n_iters, K=K, D=D, ref_phi=ref_phi,
-                    init_q=init_q)
+                    init_q=init_q, backend=backend)
 
 
 ALGORITHMS = {

@@ -1,0 +1,159 @@
+"""Compute backends: WHICH implementation runs the per-iteration hot path.
+
+The engine (core/engine.py) is written against `ConjugateExpModel`; for the
+Bayesian GMM the per-node VBE step + local VBM optimum (Eqs. 17a/18,
+Appendix A) dominates every paper experiment.  This module makes that
+compute pluggable while everything exchanged between nodes stays in
+natural-parameter space (the Khan information-geometry view: the message
+phi is backend-invariant, only the arithmetic that produces phi* varies):
+
+* `ReferenceBackend` ("reference") — the naive three-pass einsum path in
+  core/gmm.py.  Ground truth; what the fused path is parity-tested against.
+* `FusedBackend` ("fused") — one call goes data -> phi*:
+    1. unpack phi, precompute the per-node per-component kernel terms
+       (gmm.estep_terms) in `PrecisionPolicy.accum_dtype`,
+    2. run the node-batched single-pass Pallas kernel
+       (kernels/gmm_estep.gmm_estep_nodes): responsibilities + sufficient
+       statistics in ONE sweep over the data, f32 accumulation,
+    3. a fused post-stage — replication scaling + the Appendix-A VBM
+       hyperparameter update (gmm.posterior_from_stats) + expfam.pack_natural
+       — all inside the same jit.
+  Data may stream in a narrow dtype (`PrecisionPolicy.data_dtype=bf16`)
+  while accumulation stays f32, mirroring `ring_combine`'s `compute_dtype`
+  convention.
+
+Backends are selected by name or instance via `GMMModel(..., backend=)` or
+per-run via `run_vb(..., backend=)`, and compose with both executors: the
+fused kernel maps over whatever slice of the node axis the executor hands
+it, so under `MeshExecutor`/shard_map each shard runs the kernel on its
+local nodes.  Off-TPU the kernel executes in pallas interpret mode
+(numerics-identical); on a TPU backend the same call compiles to Mosaic.
+
+Every backend is a frozen dataclass: hashable, so wrappers may pass backend
+instances through `jax.jit` static arguments.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, NamedTuple, Protocol, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import expfam, gmm
+from repro.core.expfam import GMMPosterior
+
+
+class PrecisionPolicy(NamedTuple):
+    """Dtype contract of the fused hot path.
+
+    data_dtype : streaming dtype for x/mask entering the kernel (None =
+        leave as given).  bf16 halves HBM traffic on TPU; the kernel
+        upcasts blocks in VMEM.
+    accum_dtype : dtype of the unpack/precompute and the VBM post-stage
+        (statistics always accumulate in f32 inside the kernel).
+    out_dtype : dtype of the returned phi* stack (None = match the
+        incoming phi iterate, so the engine's scan carry keeps its dtype).
+    """
+
+    data_dtype: Any = None
+    accum_dtype: Any = jnp.float32
+    out_dtype: Any = None
+
+
+@runtime_checkable
+class Backend(Protocol):
+    """What a GMM compute backend provides to GMMModel.local_optimum."""
+
+    name: str
+
+    def local_vbm_optimum_nodes(self, x, mask, phi_nodes,
+                                prior: GMMPosterior, replication,
+                                K: int, D: int) -> jnp.ndarray:
+        """(N, Ni, D) data + (N, P) iterates -> (N, P) local optima phi*."""
+        ...
+
+
+@dataclasses.dataclass(frozen=True)
+class ReferenceBackend:
+    """core/gmm.py as-is: three einsum passes over the data per iteration."""
+
+    name: str = dataclasses.field(default="reference", init=False)
+
+    def local_vbm_optimum_nodes(self, x, mask, phi_nodes, prior,
+                                replication, K, D):
+        return gmm.local_vbm_optimum_nodes(x, phi_nodes, prior, replication,
+                                           K, D, mask)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("K", "D", "block_t", "data_dtype",
+                              "accum_dtype", "out_dtype"))
+def _fused_local_vbm(x, mask, phi_nodes, prior, replication, *, K, D,
+                     block_t, data_dtype, accum_dtype, out_dtype):
+    """data -> phi* in one jitted call (kernel + fused VBM post-stage)."""
+    from repro.kernels import ops
+
+    acc = accum_dtype
+    out = out_dtype if out_dtype is not None else phi_nodes.dtype
+
+    def terms(phi):
+        q = expfam.unpack_natural(phi.astype(acc), K, D)
+        return gmm.estep_terms(q, dtype=acc)
+
+    log_prior, Wn, b, c = jax.vmap(terms)(phi_nodes)
+    if data_dtype is not None:
+        x = x.astype(data_dtype)
+    mask = mask.astype(x.dtype)
+    _, R, sum_x, sum_xx = ops.gmm_estep_nodes(x, mask, log_prior, Wn, b, c,
+                                              block_t=block_t,
+                                              return_r=False)
+
+    # fused post-stage: replication scaling + Appendix-A VBM update + pack
+    rep = jnp.asarray(replication, acc)
+    prior_acc = jax.tree_util.tree_map(lambda a: a.astype(acc), prior)
+
+    def post(R_i, sx_i, sxx_i):
+        stats = gmm.SuffStats(R=rep * R_i.astype(acc),
+                              sum_x=rep * sx_i.astype(acc),
+                              sum_xx=rep * sxx_i.astype(acc))
+        return expfam.pack_natural(gmm.posterior_from_stats(stats, prior_acc))
+
+    return jax.vmap(post)(R, sum_x, sum_xx).astype(out)
+
+
+@dataclasses.dataclass(frozen=True)
+class FusedBackend:
+    """Single-pass Pallas VBE kernel + jitted VBM post-stage."""
+
+    block_t: int = 512
+    precision: PrecisionPolicy = PrecisionPolicy()
+    name: str = dataclasses.field(default="fused", init=False)
+
+    def local_vbm_optimum_nodes(self, x, mask, phi_nodes, prior,
+                                replication, K, D):
+        p = self.precision
+        return _fused_local_vbm(
+            x, mask, phi_nodes, prior, replication, K=K, D=D,
+            block_t=self.block_t, data_dtype=p.data_dtype,
+            accum_dtype=p.accum_dtype, out_dtype=p.out_dtype)
+
+
+_BY_NAME = {"reference": ReferenceBackend, "fused": FusedBackend}
+
+
+def resolve(backend: str | Backend | None) -> Backend:
+    """None -> reference; a name -> default instance; instances pass through."""
+    if backend is None:
+        return ReferenceBackend()
+    if isinstance(backend, str):
+        try:
+            return _BY_NAME[backend]()
+        except KeyError:
+            raise ValueError(
+                f"unknown backend {backend!r}; expected one of "
+                f"{sorted(_BY_NAME)} or a Backend instance") from None
+    if not isinstance(backend, Backend):
+        raise TypeError(f"not a compute backend: {backend!r}")
+    return backend

@@ -38,14 +38,16 @@ ring_diffusion_combine = engine.ring_combine_block
 
 def run_dsvb_sharded(mesh: Mesh, x, mask, weights, prior, *, n_iters: int,
                      K: int, D: int, tau: float = 0.2, d0: float = 1.0,
-                     axis: str = "data") -> jnp.ndarray:
+                     axis: str = "data", backend=None) -> jnp.ndarray:
     """Faithful dSVB with the node axis sharded over `axis`.
 
     x (N, Ni, D), mask (N, Ni), weights (N, N) row-stochastic.  Returns the
     final (N, P) natural parameters (fully replicated logical output).
+    `backend` selects the compute backend (core/backends.py) — the fused
+    Pallas kernel runs on each shard's local slice of the node axis.
     """
     run = engine.run_vb(
-        model_lib.GMMModel(prior, K, D), (x, mask),
+        model_lib.GMMModel(prior, K, D, backend=backend), (x, mask),
         engine.Diffusion(weights), n_iters=n_iters,
         schedule=engine.Schedule(tau=tau, d0=d0),
         executor=engine.MeshExecutor(mesh, axis), diagnostics=False)
@@ -55,11 +57,11 @@ def run_dsvb_sharded(mesh: Mesh, x, mask, weights, prior, *, n_iters: int,
 def run_dsvb_ring_sharded(mesh: Mesh, x, mask, prior, *, n_iters: int,
                           K: int, D: int, tau: float = 0.2, d0: float = 1.0,
                           w_self: float = 1.0 / 3.0,
-                          axis: str = "data") -> jnp.ndarray:
+                          axis: str = "data", backend=None) -> jnp.ndarray:
     """dSVB on the TPU-native ring topology: node blocks per mesh slot along
     `axis`, combine via ppermute only (no all_gather)."""
     run = engine.run_vb(
-        model_lib.GMMModel(prior, K, D), (x, mask),
+        model_lib.GMMModel(prior, K, D, backend=backend), (x, mask),
         engine.RingDiffusion(w_self), n_iters=n_iters,
         schedule=engine.Schedule(tau=tau, d0=d0),
         executor=engine.MeshExecutor(mesh, axis), diagnostics=False)
@@ -68,11 +70,13 @@ def run_dsvb_ring_sharded(mesh: Mesh, x, mask, prior, *, n_iters: int,
 
 def run_admm_sharded(mesh: Mesh, x, mask, adj, prior, *, n_iters: int,
                      K: int, D: int, rho: float = 0.5, xi: float = 0.05,
-                     project: bool = True, axis: str = "data") -> jnp.ndarray:
+                     project: bool = True, lam_max: float | None = None,
+                     axis: str = "data", backend=None) -> jnp.ndarray:
     """Faithful dVB-ADMM with the node axis sharded over `axis`."""
     run = engine.run_vb(
-        model_lib.GMMModel(prior, K, D), (x, mask),
-        engine.ADMMConsensus(adj, rho=rho, xi=xi, project=project),
+        model_lib.GMMModel(prior, K, D, backend=backend), (x, mask),
+        engine.ADMMConsensus(adj, rho=rho, xi=xi, project=project,
+                             lam_max=lam_max),
         n_iters=n_iters, executor=engine.MeshExecutor(mesh, axis),
         diagnostics=False)
     return run.phi

@@ -30,6 +30,12 @@ function under shard_map with the node axis sharded over a mesh axis, with
 each topology supplying its collective form (all_gather for arbitrary
 graphs, ppermute for the ICI ring, psum-mean for the fusion centre).
 Numerical equivalence of the two executors is asserted in the test-suite.
+
+Backends: orthogonally to the executor, `run_vb(..., backend=)` selects
+the COMPUTE implementation of the per-node hot path (model.local_optimum)
+via core/backends.py — "reference" einsums or the "fused" Pallas kernel —
+for models that support it.  Backend x executor parity is asserted in
+tests/test_backends.py.
 """
 from __future__ import annotations
 
@@ -220,6 +226,14 @@ class ADMMConsensus:
       (39)  lam_i <- lam_i + kappa_t rho/2 sum_{j in N_i}(phi_i - phi_j)
       (40)  kappa_t = 1 - 1/(1 + xi t)^2
 
+    `lam_max` (off by default — None keeps Algorithm 2 verbatim) clips each
+    dual coordinate to [-lam_max * |phi*_i|, +lam_max * |phi*_i|] after the
+    Eq. 39 ascent.  The duals only need to cancel the disagreement part of
+    phi*, so a bound proportional to the local optimum's magnitude damps
+    the wind-up observed on imbalanced instances (|lam| growing to O(|phi|)
+    and the Eq. 38b eigen-clip then amplifying the oscillation — see
+    ROADMAP "dVB-ADMM numerics").
+
     Algorithm 2 has no natural-gradient step, so `run_vb`'s `schedule` does
     not apply to this topology (run_vb rejects a non-default one).
     """
@@ -227,11 +241,12 @@ class ADMMConsensus:
     uses_schedule = False
 
     def __init__(self, adj: jnp.ndarray, rho: float = 0.5, xi: float = 0.05,
-                 project: bool = True):
+                 project: bool = True, lam_max: float | None = None):
         self.adj = adj
         self.rho = rho
         self.xi = xi
         self.project = project
+        self.lam_max = lam_max
 
     def shard_inputs(self) -> dict:
         return {"adj": self.adj}
@@ -261,6 +276,9 @@ class ADMMConsensus:
         kappa = kappa_schedule(t.astype(phi.dtype) + 1.0, self.xi)
         resid = deg[:, None] * phi_new - neigh_sum(phi_new)
         lam_new = lam + kappa * self.rho / 2.0 * resid
+        if self.lam_max is not None:
+            bound = self.lam_max * jnp.abs(phi_star)
+            lam_new = jnp.clip(lam_new, -bound, bound)
         return phi_new, lam_new
 
 
@@ -333,6 +351,7 @@ def run_vb(model, data, topology, *, n_iters: int,
            init_phi: Optional[jnp.ndarray] = None,
            ref_phi: Optional[jnp.ndarray] = None,
            executor: Optional[MeshExecutor] = None,
+           backend=None,
            diagnostics: bool = True,
            metric_nodes: Optional[int] = None) -> VBRun:
     """Run distributed VB: `model` on `data` over `topology`.
@@ -352,6 +371,11 @@ def run_vb(model, data, topology, *, n_iters: int,
     ref_phi : (P,) or (n_refs, P) reference for the Eq. 46 metric
     executor : None = single-array (node axis is a plain array axis, whole
         run jits); MeshExecutor(mesh, axis) = shard_map over a mesh axis
+    backend : per-run compute-backend override ("reference" | "fused" | a
+        `core.backends.Backend` instance) for models that support backend
+        selection via `with_backend` (GMMModel).  None keeps the model's
+        own backend.  Orthogonal to `executor`: the backend picks the
+        kernel, the executor picks how the node axis is laid out.
     diagnostics : also record per-iteration consensus error
     metric_nodes : evaluate the Eq. 46 metric on only the first
         `metric_nodes` rows (kl_nodes becomes (T, metric_nodes)) — used by
@@ -361,6 +385,13 @@ def run_vb(model, data, topology, *, n_iters: int,
     Returns a `VBRun` regardless of executor; the two paths are numerically
     equivalent (asserted in tests/test_engine.py).
     """
+    if backend is not None:
+        with_backend = getattr(model, "with_backend", None)
+        if with_backend is None:
+            raise ValueError(
+                f"{type(model).__name__} does not support compute-backend "
+                "selection (no with_backend method)")
+        model = with_backend(backend)
     if not getattr(topology, "uses_schedule", True) \
             and schedule != Schedule():
         raise ValueError(
@@ -396,17 +427,14 @@ def _run_vb_sharded(model, data, topology, schedule, replication, ref_phi,
                     diagnostics: bool) -> VBRun:
     """shard_map executor: node axis sharded over `executor.axis`."""
     mesh, axis = executor.mesh, executor.axis
-    from jax.sharding import PartitionSpec as P
+    from repro.dist import sharding
 
     local_inputs = topology.shard_inputs()          # dict of (N, ...) arrays
     local_keys = tuple(sorted(local_inputs))
     has_carry = carry0 is not None
 
-    node = P(axis)
-    data_specs = jax.tree_util.tree_map(lambda _: node, data)
-    carry_spec = node if has_carry else P()
-    in_specs = (data_specs, node, carry_spec) + (node,) * len(local_keys)
-    out_specs = (node, P(None, axis), P(None))
+    in_specs, out_specs = sharding.vb_node_specs(
+        data, axis=axis, has_carry=has_carry, n_local=len(local_keys))
 
     def run(data_l, phi_l, carry_l, *local_vals):
         local = dict(zip(local_keys, local_vals))

@@ -5,11 +5,18 @@ the *replicated* likelihood P({x_i}_N | ...) = prod_j prod_k N(x | mu, L)^(N y),
 so every local count is scaled by the network size N (Appendix A: R_ik =
 N * sum_j r_ijk, etc.).
 
-`vbe_step` computes responsibilities given the current global posterior and
-returns the *local optimum* natural parameters phi*_{theta,i} (Eq. 18) — i.e.
-the hyperparameter update of Appendix A packed via expfam.pack_natural.  The
-five algorithms in core/algorithms.py differ only in what they do with the
-stack {phi*_i}.
+`local_vbm_optimum` computes responsibilities given the current global
+posterior and returns the *local optimum* natural parameters phi*_{theta,i}
+(Eq. 18) — i.e. the hyperparameter update of Appendix A packed via
+expfam.pack_natural.  The five algorithms in core/algorithms.py differ only
+in what they do with the stack {phi*_i}.
+
+This module is the REFERENCE implementation of the hot path (naive
+three-pass einsums over the data).  The engine's production compute layer
+is `core/backends.py`: the fused single-pass Pallas kernel
+(`kernels/gmm_estep.py`) is parity-tested against the functions here
+(tests/test_backends.py, tests/test_kernels.py) and selected via
+`GMMModel(..., backend="fused")` / `run_vb(..., backend="fused")`.
 """
 from __future__ import annotations
 
@@ -49,6 +56,31 @@ def responsibilities(x: jnp.ndarray, q: GMMPosterior,
     if mask is not None:
         r = r * mask[:, None]
     return r
+
+
+def estep_terms(q: GMMPosterior, dtype=None):
+    """Per-component terms consumed by the fused VBE kernel
+    (kernels/gmm_estep.py) — the expanded form of the Appendix-A
+    log-responsibility:
+
+      log_prior (K,)   = E[ln pi] + 1/2 E[ln|L|] - D/2 ln 2pi
+      Wn (K, D, D)     = nu W          (E[Lambda])
+      b  (K, D)        = nu W m        (E[Lambda mu])
+      c  (K,)          = D/beta + nu m^T W m   (E[mu^T Lambda mu])
+
+    so that ln rho_jk = log_prior_k - (x^T Wn x - 2 x^T b + c) / 2,
+    identical (up to f.p. reassociation) to `responsibilities`.
+    """
+    D = q.D
+    e_logpi = expfam.dirichlet_expected_log(q.alpha)
+    e_logdet = expfam.wishart_expected_logdet(q.W, q.nu)
+    log_prior = e_logpi + 0.5 * e_logdet - 0.5 * D * jnp.log(2.0 * jnp.pi)
+    Wn = q.nu[:, None, None] * q.W
+    b = jnp.einsum("kde,ke->kd", Wn, q.m)
+    c = D / q.beta + jnp.einsum("kd,kd->k", q.m, b)
+    if dtype is not None:
+        log_prior, Wn, b, c = (a.astype(dtype) for a in (log_prior, Wn, b, c))
+    return log_prior, Wn, b, c
 
 
 def sufficient_stats(x: jnp.ndarray, r: jnp.ndarray,

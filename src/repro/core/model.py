@@ -27,7 +27,7 @@ from typing import Any, Protocol, runtime_checkable
 import jax
 import jax.numpy as jnp
 
-from repro.core import expfam, gmm, linreg
+from repro.core import backends, expfam, gmm, linreg
 from repro.core.expfam import GMMPosterior
 from repro.core.linreg import NGPosterior
 
@@ -77,13 +77,26 @@ class ConjugateExpModel(Protocol):
 # Bayesian GMM (the paper's worked example)
 # ---------------------------------------------------------------------------
 class GMMModel:
-    """Dirichlet x Normal-Wishart mixture posterior in natural-param space."""
+    """Dirichlet x Normal-Wishart mixture posterior in natural-param space.
+
+    `backend` selects the compute implementation of the per-iteration hot
+    path (core/backends.py): "reference" (default; core/gmm.py einsums) or
+    "fused" (node-batched single-pass Pallas kernel + jitted VBM
+    post-stage), or any `backends.Backend` instance — e.g.
+    `backends.FusedBackend(precision=PrecisionPolicy(data_dtype=bf16))`.
+    """
 
     def __init__(self, prior: GMMPosterior, K: int | None = None,
-                 D: int | None = None):
+                 D: int | None = None,
+                 backend: str | backends.Backend | None = None):
         self.prior = prior
         self.K = K if K is not None else prior.K
         self.D = D if D is not None else prior.D
+        self.backend = backends.resolve(backend)
+
+    def with_backend(self, backend) -> "GMMModel":
+        """Same model, different compute backend (used by run_vb(backend=))."""
+        return GMMModel(self.prior, self.K, self.D, backend=backend)
 
     @property
     def flat_dim(self) -> int:
@@ -100,8 +113,8 @@ class GMMModel:
 
     def local_optimum(self, data, phi_nodes, replication):
         x, mask = data
-        return gmm.local_vbm_optimum_nodes(
-            x, phi_nodes, self.prior, replication, self.K, self.D, mask)
+        return self.backend.local_vbm_optimum_nodes(
+            x, mask, phi_nodes, self.prior, replication, self.K, self.D)
 
     def project_to_domain(self, phi: jnp.ndarray) -> jnp.ndarray:
         return expfam.project_to_domain(phi, self.K, self.D)
@@ -130,6 +143,16 @@ class LinRegModel:
         if linreg.flat_dim(D) != P:
             raise ValueError(f"no integer D with flat_dim(D) == {P}")
         return cls(D=D)
+
+    def with_backend(self, backend) -> "LinRegModel":
+        """LinRegModel has no data hot loop (phi* is a one-time closed form),
+        so only the reference backend applies."""
+        resolved = backends.resolve(backend)
+        if resolved.name != "reference":
+            raise ValueError(
+                f"LinRegModel has no {resolved.name!r} compute backend; "
+                "its VBE step is trivial (no per-iteration data pass)")
+        return self
 
     @property
     def flat_dim(self) -> int:

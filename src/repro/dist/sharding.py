@@ -79,6 +79,27 @@ def param_shardings(tree, mesh: Mesh, *, fsdp: bool = False,
     return jax.tree_util.tree_map_with_path(one, tree)
 
 
+def vb_node_specs(data, *, axis: str, has_carry: bool, n_local: int):
+    """(in_specs, out_specs) for the VB engine's shard_map executor
+    (core/engine._run_vb_sharded): every per-node array — the data pytree's
+    leaves, the phi iterate, the topology carry (ADMM duals) and the
+    topology's `shard_inputs` rows (weight/adjacency rows) — shards its
+    leading node axis over the mesh axis `axis`; outputs are
+    (phi (N, P), kl trajectories (T, N), consensus error (T,)).
+
+    One home for the engine's partitioning rule so the compute backends
+    (core/backends.py) and the executors agree on what "node-sharded"
+    means: a backend always receives the LOCAL slice of the node axis and
+    never needs to know the mesh.
+    """
+    node = P(axis)
+    data_specs = jax.tree_util.tree_map(lambda _: node, data)
+    carry_spec = node if has_carry else P()
+    in_specs = (data_specs, node, carry_spec) + (node,) * n_local
+    out_specs = (node, P(None, axis), P(None))
+    return in_specs, out_specs
+
+
 def batch_spec(mesh: Mesh) -> P:
     """Batch-dim spec: shard dim 0 over whichever of (pod, data) exist."""
     axes = tuple(a for a in ("pod", "data")

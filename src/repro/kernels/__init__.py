@@ -1,6 +1,11 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+# The engine's compute layer (plus TPU kernels for the LM stack).
+#
+# gmm_estep.py is the production hot path of the VB engine: the fused
+# single-pass VBE kernel (responsibilities + sufficient statistics), both
+# single-node and node-batched (`gmm_estep_nodes`), selected via
+# core/backends.py (`GMMModel(..., backend="fused")` / run_vb(backend=)).
+# core/gmm.py keeps the naive reference implementation it is parity-tested
+# against (tests/test_backends.py, tests/test_kernels.py).
 #
 # Kernels present (validated interpret=True vs ref.py; TPU-targeted):
 #   gmm_estep.py       — fused GMM VBE responsibilities + sufficient stats

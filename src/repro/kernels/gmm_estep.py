@@ -11,6 +11,22 @@ written out once at the end.
 
 Inputs are the same precomputed per-component terms the oracle uses:
   log_prior (K,)  Wn (K,D,D)=nu W   b (K,D)=nu W m   c (K,)=D/beta + nu mWm
+
+`gmm_estep_nodes` is the engine hot path: a whole sensor network at once,
+x (N, T, D) with a (node, data-block) grid.  Each node has its own
+per-component terms (its own current posterior), the data-block axis is the
+minor (sequential) grid dimension so the VMEM accumulator carries per-node
+partial statistics and is emitted once per node.  `gmm_estep` is the
+single-node view (x (T, D)), a thin wrapper over the same kernel.
+
+The engine only consumes the statistics; `return_r=False` drops the
+responsibilities output entirely (no (N, T, K) write-back to HBM per
+iteration — a multi-output pallas_call is opaque to XLA, so a dead output
+would otherwise still be materialised).
+
+Data may stream in a narrow dtype (bf16); quadratic forms and statistic
+accumulation always run in f32 (`preferred_element_type`) — the engine's
+precision-policy contract (see core/backends.py).
 """
 from __future__ import annotations
 
@@ -22,25 +38,33 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
-def _kernel(x_ref, mask_ref, lp_ref, wn_ref, b_ref, c_ref,
-            r_ref, stats_ref, acc_ref, *, K: int, D: int):
-    ti = pl.program_id(0)
-    nt = pl.num_programs(0)
+def _kernel_nodes(x_ref, mask_ref, lp_ref, wn_ref, b_ref, c_ref,
+                  *out_refs, K: int, D: int, return_r: bool):
+    """One (node, data-block) grid cell.  Every ref carries a leading
+    node-block axis of 1; the accumulator is reset at the start of each
+    node's (sequential, minor) data-block sweep and emitted at its end.
+    out_refs = (r_ref, stats_ref, acc_ref) or (stats_ref, acc_ref)."""
+    if return_r:
+        r_ref, stats_ref, acc_ref = out_refs
+    else:
+        stats_ref, acc_ref = out_refs
+    ti = pl.program_id(1)
+    nt = pl.num_programs(1)
 
     @pl.when(ti == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    x = x_ref[...].astype(jnp.float32)                   # (Tb, D)
-    mask = mask_ref[...].astype(jnp.float32)             # (Tb, 1)
-    lp = lp_ref[...].astype(jnp.float32)                 # (1, K)
-    bmat = b_ref[...].astype(jnp.float32)                # (K, D)
-    cvec = c_ref[...].astype(jnp.float32)                # (1, K)
+    x = x_ref[0].astype(jnp.float32)                     # (Tb, D)
+    mask = mask_ref[0].astype(jnp.float32)               # (Tb, 1)
+    lp = lp_ref[...].reshape(1, K).astype(jnp.float32)
+    bmat = b_ref[0].astype(jnp.float32)                  # (K, D)
+    cvec = c_ref[...].reshape(1, K).astype(jnp.float32)
 
     # quadratic forms, one MXU matmul per component (K is small, static)
     quads = []
     for k in range(K):
-        Wk = wn_ref[k].astype(jnp.float32)               # (D, D)
+        Wk = wn_ref[0, k].astype(jnp.float32)            # (D, D)
         xW = jax.lax.dot_general(x, Wk, (((1,), (0,)), ((), ())),
                                  preferred_element_type=jnp.float32)
         quads.append(jnp.sum(xW * x, axis=1, keepdims=True))
@@ -52,7 +76,8 @@ def _kernel(x_ref, mask_ref, lp_ref, wn_ref, b_ref, c_ref,
     m = jnp.max(log_rho, axis=1, keepdims=True)
     p = jnp.exp(log_rho - m)
     r = p / jnp.sum(p, axis=1, keepdims=True) * mask     # (Tb, K)
-    r_ref[...] = r.astype(r_ref.dtype)
+    if return_r:
+        r_ref[0] = r.astype(r_ref.dtype)
 
     # accumulate sufficient statistics in VMEM scratch
     # acc layout: rows [0:K] = sum_x (K, D); row-blocks K + k*D : K+(k+1)*D
@@ -70,45 +95,63 @@ def _kernel(x_ref, mask_ref, lp_ref, wn_ref, b_ref, c_ref,
 
     @pl.when(ti == nt - 1)
     def _emit():
-        stats_ref[...] = acc_ref[...]
+        stats_ref[0] = acc_ref[...]
+
+
+def gmm_estep_nodes(x, mask, log_prior, Wn, b, c, *, block_t: int = 512,
+                    interpret: bool = True, return_r: bool = True):
+    """Whole-network fused VBE step: x (N, T, D), mask (N, T), per-node
+    per-component terms log_prior (N, K), Wn (N, K, D, D), b (N, K, D),
+    c (N, K).  Returns (r (N, T, K), R (N, K), sum_x (N, K, D),
+    sum_xx (N, K, D, D)) — unreplicated stats, node i matching
+    ref.gmm_estep(x[i], ...).  With `return_r=False` (the engine hot path,
+    which only needs the statistics) r is None and never written to HBM.
+    Grid is (node, data-block) with the data axis minor, so each node's
+    statistics accumulate sequentially in one VMEM scratch and are written
+    out once."""
+    N, T, D = x.shape
+    K = log_prior.shape[-1]
+    bt = min(block_t, max(8, T))
+    Tp = ((T + bt - 1) // bt) * bt
+    if Tp != T:
+        x = jnp.pad(x, ((0, 0), (0, Tp - T), (0, 0)))
+        mask = jnp.pad(mask, ((0, 0), (0, Tp - T)))
+    rows = K + K * D + K
+    out_specs = [pl.BlockSpec((1, rows, D), lambda n, t: (n, 0, 0))]
+    out_shape = [jax.ShapeDtypeStruct((N, rows, D), jnp.float32)]
+    if return_r:
+        out_specs.insert(0, pl.BlockSpec((1, bt, K), lambda n, t: (n, t, 0)))
+        out_shape.insert(0, jax.ShapeDtypeStruct((N, Tp, K), jnp.float32))
+    out = pl.pallas_call(
+        functools.partial(_kernel_nodes, K=K, D=D, return_r=return_r),
+        grid=(N, Tp // bt),
+        in_specs=[
+            pl.BlockSpec((1, bt, D), lambda n, t: (n, t, 0)),
+            pl.BlockSpec((1, bt, 1), lambda n, t: (n, t, 0)),
+            pl.BlockSpec((1, K), lambda n, t: (n, 0)),
+            pl.BlockSpec((1, K, D, D), lambda n, t: (n, 0, 0, 0)),
+            pl.BlockSpec((1, K, D), lambda n, t: (n, 0, 0)),
+            pl.BlockSpec((1, K), lambda n, t: (n, 0)),
+        ],
+        out_specs=out_specs,
+        out_shape=out_shape,
+        scratch_shapes=[pltpu.VMEM((rows, D), jnp.float32)],
+        interpret=interpret,
+    )(x, mask[..., None], log_prior, Wn, b, c)
+    stats = out[-1]
+    r = out[0][:, :T] if return_r else None
+    sum_x = stats[:, 0:K, :]
+    sum_xx = stats[:, K:K + K * D, :].reshape(N, K, D, D)
+    R = stats[:, K + K * D:K + K * D + K, 0]
+    return r, R, sum_x, sum_xx
 
 
 def gmm_estep(x, mask, log_prior, Wn, b, c, *, block_t: int = 512,
               interpret: bool = True):
     """x (T, D), mask (T,).  Returns (r (T,K), R (K,), sum_x (K,D),
-    sum_xx (K,D,D)) — unreplicated stats, matching ref.gmm_estep."""
-    T, D = x.shape
-    K = log_prior.shape[0]
-    bt = min(block_t, max(8, T))
-    Tp = ((T + bt - 1) // bt) * bt
-    if Tp != T:
-        x = jnp.pad(x, ((0, Tp - T), (0, 0)))
-        mask = jnp.pad(mask, ((0, Tp - T),))
-    rows = K + K * D + K
-    r, stats = pl.pallas_call(
-        functools.partial(_kernel, K=K, D=D),
-        grid=(Tp // bt,),
-        in_specs=[
-            pl.BlockSpec((bt, D), lambda t: (t, 0)),
-            pl.BlockSpec((bt, 1), lambda t: (t, 0)),
-            pl.BlockSpec((1, K), lambda t: (0, 0)),
-            pl.BlockSpec((K, D, D), lambda t: (0, 0, 0)),
-            pl.BlockSpec((K, D), lambda t: (0, 0)),
-            pl.BlockSpec((1, K), lambda t: (0, 0)),
-        ],
-        out_specs=[
-            pl.BlockSpec((bt, K), lambda t: (t, 0)),
-            pl.BlockSpec((rows, D), lambda t: (0, 0)),
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((Tp, K), jnp.float32),
-            jax.ShapeDtypeStruct((rows, D), jnp.float32),
-        ],
-        scratch_shapes=[pltpu.VMEM((rows, D), jnp.float32)],
-        interpret=interpret,
-    )(x, mask[:, None], log_prior[None, :], Wn, b, c[None, :])
-    r = r[:T]
-    sum_x = stats[0:K, :]
-    sum_xx = stats[K:K + K * D, :].reshape(K, D, D)
-    R = stats[K + K * D:K + K * D + K, 0]
-    return r, R, sum_x, sum_xx
+    sum_xx (K,D,D)) — unreplicated stats, matching ref.gmm_estep.  The
+    single-node view of `gmm_estep_nodes` (one shared kernel body)."""
+    r, R, sum_x, sum_xx = gmm_estep_nodes(
+        x[None], mask[None], log_prior[None], Wn[None], b[None], c[None],
+        block_t=block_t, interpret=interpret)
+    return r[0], R[0], sum_x[0], sum_xx[0]

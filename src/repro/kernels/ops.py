@@ -52,18 +52,30 @@ def gmm_estep(x, mask, log_prior, Wn, b, c, *, block_t: int = 512):
                          interpret=_default_interpret())
 
 
-def gmm_estep_from_posterior(x, mask, q, *, block_t: int = 512):
+@functools.partial(jax.jit, static_argnames=("block_t", "return_r"))
+def gmm_estep_nodes(x, mask, log_prior, Wn, b, c, *, block_t: int = 512,
+                    return_r: bool = True):
+    """Node-batched fused VBE step: x (N, T, D) and per-node terms; see
+    gmm_estep.gmm_estep_nodes.  The engine hot path (core/backends.py)
+    passes return_r=False — only the statistics leave the kernel."""
+    return _ge.gmm_estep_nodes(x, mask, log_prior, Wn, b, c, block_t=block_t,
+                               interpret=_default_interpret(),
+                               return_r=return_r)
+
+
+@functools.partial(jax.jit, static_argnames=("block_t", "compute_dtype"))
+def gmm_estep_from_posterior(x, mask, q, *, block_t: int = 512,
+                             compute_dtype=None):
     """Convenience: compute the kernel's precomputed terms from a
     GMMPosterior, then run the fused kernel.  Matches
-    gmm.responsibilities + gmm.sufficient_stats (replication=1)."""
-    from repro.core import expfam
-    D = x.shape[-1]
-    e_logpi = expfam.dirichlet_expected_log(q.alpha)
-    e_logdet = expfam.wishart_expected_logdet(q.W, q.nu)
-    log_prior = (e_logpi + 0.5 * e_logdet
-                 - 0.5 * D * jnp.log(2.0 * jnp.pi)).astype(jnp.float32)
-    Wn = (q.nu[:, None, None] * q.W).astype(jnp.float32)
-    b = jnp.einsum("kde,ke->kd", Wn, q.m).astype(jnp.float32)
-    c = (D / q.beta + jnp.einsum("kd,kd->k", q.m, b)).astype(jnp.float32)
-    return gmm_estep(x.astype(jnp.float32), mask.astype(jnp.float32),
-                     log_prior, Wn, b, c, block_t=block_t)
+    gmm.responsibilities + gmm.sufficient_stats (replication=1).
+
+    The per-component precompute runs INSIDE this jit in `compute_dtype`
+    (default: the posterior's own dtype — the caller's precision policy
+    decides; nothing is hard-cast).  `x`/`mask` stream into the kernel at
+    whatever dtype they arrive in; the kernel accumulates in f32.
+    """
+    from repro.core import gmm
+    log_prior, Wn, b, c = gmm.estep_terms(q, dtype=compute_dtype)
+    return _ge.gmm_estep(x, mask, log_prior, Wn, b, c, block_t=block_t,
+                         interpret=_default_interpret())

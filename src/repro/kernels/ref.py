@@ -81,3 +81,9 @@ def gmm_estep(x, mask, log_prior, Wn, b, c):
     sum_x = r.T @ x
     sum_xx = jnp.einsum("tk,td,te->kde", r, x, x)
     return r, R, sum_x, sum_xx
+
+
+def gmm_estep_nodes(x, mask, log_prior, Wn, b, c):
+    """Node-batched oracle: leading N axis on every argument, node i
+    matching gmm_estep(x[i], mask[i], ...)."""
+    return jax.vmap(gmm_estep)(x, mask, log_prior, Wn, b, c)
