@@ -1,11 +1,16 @@
-"""Beyond-paper benchmark: the paper's consensus algorithms as training
-data-parallelism, measured on ACTUAL training (not just lowered HLO).
+"""Consensus benchmarks, both layers of the stack:
 
-Trains the same tiny LM for N steps under allreduce / diffusion / admm on
-an emulated 4-replica mesh (subprocess with host devices) and reports final
-losses + replica disagreement.  Validates that the dSVB/dVB-ADMM update
-rules train comparably to exact averaging at matched step counts — the
-LM-training analogue of the paper's "distributed ~= centralised" claim.
+* `run` (group "consensus_lm") — beyond-paper: the paper's consensus
+  algorithms as training data-parallelism, measured on ACTUAL training.
+  Trains the same tiny LM for N steps under allreduce / diffusion / admm
+  on an emulated 4-replica mesh (subprocess with host devices) and reports
+  final losses + replica disagreement.
+* `vb_run` (group "consensus_vb") — the adaptive-penalty dVB-ADMM
+  subsystem on the paper's GMM instance: plain Algorithm 2 vs
+  `ADMMConsensus(adaptive_rho=True)`, with the `ConsensusDiagnostics`
+  summary (dual-activation iteration, final rho, clip/reset totals) in the
+  derived column and the --json snapshot.  This is the benchmark-level
+  guard on the docs/admm-convergence.md convergence story.
 """
 from __future__ import annotations
 
@@ -13,6 +18,7 @@ import json
 import os
 import subprocess
 import sys
+import time
 
 from benchmarks import common
 
@@ -38,6 +44,63 @@ for mode in ["allreduce", "diffusion", "admm"]:
                  "resid": hist[-1].get("consensus_residual")}
 print("RESULT" + json.dumps(out))
 """
+
+
+def vb_run(full=False):
+    """Adaptive-penalty dVB-ADMM vs plain Algorithm 2 + diagnostics row."""
+    import jax
+    import jax.numpy as jnp
+    from repro.core import algorithms
+    from repro.data import synthetic
+
+    x64_before = jax.config.jax_enable_x64
+    try:
+        K, D = 3, 2
+        n_nodes, n_per, n_iters = (50, 100, 1500) if full else (20, 60, 300)
+        data = synthetic.paper_synthetic(n_nodes=n_nodes, n_per_node=n_per,
+                                         seed=1)
+        s = common.setup_gmm(data, K, D, seed=0, graph_seed=3)  # enables x64
+        kw = dict(n_iters=n_iters, K=K, D=D, ref_phi=s["ref_phis"],
+                  init_q=s["init_q"])
+
+        cvb = algorithms.run_cvb(data.x, data.mask, s["prior"], **kw)
+
+        def run_adaptive():
+            return algorithms.run_dvb_admm(data.x, data.mask, s["adj"],
+                                           s["prior"], rho=0.5,
+                                           adaptive_rho=True, **kw)
+
+        adaptive = run_adaptive()
+        jax.block_until_ready(adaptive.phi)          # warm the whole-run jit
+        t0 = time.perf_counter()
+        adaptive = run_adaptive()
+        jax.block_until_ready(adaptive.phi)
+        us = (time.perf_counter() - t0) / n_iters * 1e6
+        plain = algorithms.run_dvb_admm(data.x, data.mask, s["adj"],
+                                        s["prior"], rho=0.5, **kw)
+
+        d = adaptive.consensus_diag
+        dual_on_at = (int(jnp.argmax(d.dual_on))
+                      if float(d.dual_on[-1]) else -1)
+        summary = dict(
+            kl_cvb=float(cvb.kl_mean[-1]),
+            kl_adaptive=float(adaptive.kl_mean[-1]),
+            kl_plain=float(plain.kl_mean[-1]),
+            dual_on_at=dual_on_at,
+            rho_final=float(jnp.mean(d.rho[-1])),
+            clips=int(jnp.sum(d.clip_count)),
+            resets=int(jnp.sum(d.reset_count)),
+            primal_resid_final=float(jnp.mean(d.primal_resid[-1])),
+            dual_resid_final=float(jnp.mean(d.dual_resid[-1])))
+        common.save("consensus_vb_adaptive", summary)
+        return [("consensus_vb_adaptive", us,
+                 f"kl adaptive={summary['kl_adaptive']:.2f} "
+                 f"cvb={summary['kl_cvb']:.2f} "
+                 f"plain={summary['kl_plain']:.1e} "
+                 f"dual_on@{dual_on_at} rho={summary['rho_final']:.2f} "
+                 f"clips={summary['clips']}")]
+    finally:
+        jax.config.update("jax_enable_x64", x64_before)
 
 
 def run(full=False):

@@ -45,6 +45,7 @@ def main() -> None:
                   ("kernel_bench", "kernel_bench", kernel_bench.run),
                   ("gmm_backend", "gmm_backend", gmm_backend_bench.run),
                   ("consensus_lm", "consensus_lm", consensus_bench.run),
+                  ("consensus_vb", "consensus_vb", consensus_bench.vb_run),
                   ("roofline", "roofline", roofline.run)])
     if args.only:
         pre = tuple(args.only.split(","))

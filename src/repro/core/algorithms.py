@@ -122,14 +122,28 @@ def run_dsvb(x, mask, weights, prior: GMMPosterior, *, n_iters: int,
 # ---------------------------------------------------------------------------
 @functools.partial(jax.jit,
                    static_argnames=("n_iters", "K", "D", "project",
-                                    "backend"))
+                                    "backend", "adaptive_rho", "per_block",
+                                    "dual_warmup", "dual_reset"))
 def run_dvb_admm(x, mask, adj, prior: GMMPosterior, *, n_iters: int,
                  K: int, D: int, rho: float = 0.5, xi: float = 0.05,
                  project: bool = True, lam_max: float | None = None,
+                 adaptive_rho: bool = False, per_block: bool = False,
+                 dual_warmup: bool | str = "auto",
+                 dual_reset: float | None | str = "auto",
                  ref_phi=None, init_q: GMMPosterior | None = None,
                  backend=None) -> VBRun:
+    """Algorithm 2; defaults are the paper verbatim.  `adaptive_rho=True`
+    enables the convergent adaptive-penalty configuration (residual
+    balancing + dual warmup + dual reset — engine.ADMMConsensus); the
+    per-iteration `ConsensusDiagnostics` comes back on
+    `VBRun.consensus_diag`.  Finer-grained knobs: call `engine.run_vb`
+    with an `engine.ADMMConsensus` directly."""
     topology = engine.ADMMConsensus(adj, rho=rho, xi=xi, project=project,
-                                    lam_max=lam_max)
+                                    lam_max=lam_max,
+                                    adaptive_rho=adaptive_rho,
+                                    per_block=per_block,
+                                    dual_warmup=dual_warmup,
+                                    dual_reset=dual_reset)
     return _gmm_run(x, mask, prior, topology, engine.Schedule(),
                     n_iters=n_iters, K=K, D=D, ref_phi=ref_phi,
                     init_q=init_q, backend=backend)

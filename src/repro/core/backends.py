@@ -55,6 +55,14 @@ class PrecisionPolicy(NamedTuple):
         (statistics always accumulate in f32 inside the kernel).
     out_dtype : dtype of the returned phi* stack (None = match the
         incoming phi iterate, so the engine's scan carry keeps its dtype).
+
+    Example — stream bf16, accumulate f32 (the TPU-friendly setting):
+
+    >>> import jax.numpy as jnp
+    >>> policy = PrecisionPolicy(data_dtype=jnp.bfloat16)
+    >>> backend = FusedBackend(precision=policy)
+    >>> backend.name, backend.precision.accum_dtype is jnp.float32
+    ('fused', True)
     """
 
     data_dtype: Any = None
@@ -64,7 +72,20 @@ class PrecisionPolicy(NamedTuple):
 
 @runtime_checkable
 class Backend(Protocol):
-    """What a GMM compute backend provides to GMMModel.local_optimum."""
+    """What a GMM compute backend provides to GMMModel.local_optimum.
+
+    Backends are selected by name, instance, or per run — all equivalent:
+
+    >>> resolve(None).name                    # default
+    'reference'
+    >>> resolve("fused").name                 # by name
+    'fused'
+    >>> resolve(ReferenceBackend()).name      # instances pass through
+    'reference'
+
+    and plug in via ``GMMModel(..., backend=)`` or
+    ``engine.run_vb(..., backend=)``.
+    """
 
     name: str
 

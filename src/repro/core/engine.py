@@ -7,7 +7,8 @@ This module owns that second half ONCE; `core/algorithms.py` (GMM),
 `core/linreg.py` (Normal-Gamma) and `core/distributed.py` (shard_map mesh
 runners) are thin wrappers over `run_vb`.
 
-Equation -> code map (the only implementations in the repo):
+Equation -> code map (the only implementations in the repo; the full map
+with Eqs. 38-40 spelled out lives in docs/ARCHITECTURE.md):
 
 * Eq. 20   fusion-centre average                `FusionCenter.combine`
 * Eq. 22/29 Robbins-Monro step size eta_t       `eta_schedule` / `Schedule`
@@ -23,6 +24,16 @@ Equation -> code map (the only implementations in the repo):
 * Eq. 46   KL performance metric                `kl_to_reference`
 * Eq. 47   nearest-neighbour weights            `network.nearest_neighbor_weights`
                                                 (ring case: `RingDiffusion`)
+
+`ADMMConsensus` additionally carries the adaptive-penalty consensus
+subsystem (off by default; Algorithm 2 verbatim otherwise): residual
+balancing of rho (Boyd et al., "Distributed Optimization and Statistical
+Learning via ADMM", Sec. 3.4.1), per-block dual scaling over the model's
+natural-parameter blocks, a residual-gated dual warmup, and dual reset on
+Eq. 38b eigen-clip activation, all observable through the per-iteration
+`ConsensusDiagnostics` record on `VBRun.consensus_diag`.  The convergence
+story (why plain Algorithm 2 winds up on imbalanced instances and how the
+subsystem fixes it) is docs/admm-convergence.md.
 
 Executors: the default executor runs the node axis as a plain array axis
 (whole runs jit + lax.scan); `MeshExecutor(mesh, axis)` runs the SAME step
@@ -51,12 +62,24 @@ from repro.dist import compat
 # Step-size schedules (Eqs. 29 and 40)
 # ---------------------------------------------------------------------------
 def eta_schedule(t: jnp.ndarray, tau: float, d0: float = 1.0) -> jnp.ndarray:
-    """eta_t = 1 / (d0 + tau * t); satisfies Robbins-Monro (Eq. 22)."""
+    """eta_t = 1 / (d0 + tau * t); satisfies Robbins-Monro (Eq. 22).
+
+    >>> import jax.numpy as jnp
+    >>> [round(float(eta_schedule(jnp.asarray(t), tau=0.5)), 3)
+    ...  for t in (1.0, 2.0, 10.0)]
+    [0.667, 0.5, 0.167]
+    """
     return 1.0 / (d0 + tau * t)
 
 
 def kappa_schedule(t: jnp.ndarray, xi: float = 0.05) -> jnp.ndarray:
-    """kappa_t = 1 - 1/(1 + xi t)^2 ramps the ADMM dual step (Eq. 40)."""
+    """kappa_t = 1 - 1/(1 + xi t)^2 ramps the ADMM dual step (Eq. 40).
+
+    >>> import jax.numpy as jnp
+    >>> kap = kappa_schedule(jnp.arange(1.0, 100.0))
+    >>> bool(kap[0] < 0.15), bool(kap[-1] > 0.95)
+    (True, True)
+    """
     return 1.0 - 1.0 / (1.0 + xi * t) ** 2
 
 
@@ -66,6 +89,12 @@ class Schedule(NamedTuple):
     `eta_fixed=1.0` recovers the one-shot estimators (cVB / noncoop /
     nsg-dVB), where the iterate jumps straight to (a combination of) the
     local optima; `eta_fixed=None` is the paper's Robbins-Monro schedule.
+
+    >>> import jax.numpy as jnp
+    >>> round(float(Schedule(tau=0.2).eta(jnp.asarray(0.0))), 4)  # t=1
+    0.8333
+    >>> float(ONE_SHOT.eta(jnp.asarray(0.0)))              # jump to phi*
+    1.0
     """
 
     tau: float = 0.2
@@ -131,21 +160,63 @@ def ring_combine_block(varphi: jnp.ndarray, axis_name: str,
 
 
 # ---------------------------------------------------------------------------
+# Residual balancing (Boyd et al. Sec. 3.4.1) — ONE rule shared by the VB
+# consensus topology below and the training-layer consensus optimiser
+# (optim/consensus.py)
+# ---------------------------------------------------------------------------
+def residual_balanced_rho(rho, r_norm, s_norm, *, mu: float = 10.0,
+                          tau_incr: float = 2.0, tau_decr: float = 2.0,
+                          rho_min: float = 1e-3, rho_max: float = 1e3):
+    """One residual-balancing update of the ADMM penalty.
+
+    Grow rho by `tau_incr` where the primal residual dominates
+    (||r|| > mu ||s||: the iterates still disagree, press harder), shrink
+    by `tau_decr` where the dual residual dominates (||s|| > mu ||r||: the
+    penalty is bullying the local objectives), else leave unchanged;
+    always clip to [rho_min, rho_max].  Shapes broadcast, so `rho` may be
+    a scalar or a per-block vector.
+
+    >>> import jax.numpy as jnp
+    >>> float(residual_balanced_rho(jnp.asarray(1.0), 100.0, 1.0))
+    2.0
+    >>> float(residual_balanced_rho(jnp.asarray(1.0), 1.0, 100.0))
+    0.5
+    >>> float(residual_balanced_rho(jnp.asarray(1.0), 1.0, 2.0))
+    1.0
+    """
+    grow = r_norm > mu * s_norm
+    shrink = s_norm > mu * r_norm
+    fac = jnp.where(grow, tau_incr, jnp.where(shrink, 1.0 / tau_decr, 1.0))
+    return jnp.clip(rho * fac, rho_min, rho_max)
+
+
+# ---------------------------------------------------------------------------
 # Topologies / combiners
 # ---------------------------------------------------------------------------
 class _CombineTopology:
     """Topologies of the form: (27a) varphi_i = phi_i + eta (phi*_i - phi_i),
-    then a linear combine of {varphi_i}.  Subclasses supply `combine`."""
+    then a linear combine of {varphi_i}.  Subclasses supply `combine`.
+
+    `step` returns (phi_next, carry_next, diag): the third slot is the
+    per-iteration diagnostics pytree (None for combine topologies; only
+    `ADMMConsensus` emits a `ConsensusDiagnostics`)."""
 
     uses_schedule = True
+    emits_diagnostics = False
 
     def shard_inputs(self) -> dict:
         """Per-node arrays the mesh executor must shard along the node axis
         (e.g. the rows of the combination-weight matrix)."""
         return {}
 
-    def init_carry(self, phi0: jnp.ndarray):
+    def init_carry(self, phi0: jnp.ndarray, model=None):
         return None
+
+    def carry_specs(self, axis: str):
+        """shard_map PartitionSpec pytree for `init_carry`'s output (leaf
+        prefix: per-node arrays shard their leading node axis)."""
+        from jax.sharding import PartitionSpec as P
+        return P(axis)
 
     def combine(self, varphi, *, axis=None, local=None):
         raise NotImplementedError
@@ -157,11 +228,20 @@ class _CombineTopology:
             varphi = phi_star                       # one-shot: jump to phi*
         else:
             varphi = phi + eta * (phi_star - phi)   # Eq. 27a
-        return self.combine(varphi, axis=axis, local=local), carry
+        return self.combine(varphi, axis=axis, local=local), carry, None
 
 
 class FusionCenter(_CombineTopology):
-    """Centralised reference: phi <- mean_i phi*_i exactly (Eq. 20)."""
+    """Centralised reference: phi <- mean_i phi*_i exactly (Eq. 20).
+
+    Every node ends up holding the same iterate — the fusion-centre average
+    of the local optima:
+
+    >>> import jax.numpy as jnp
+    >>> varphi = jnp.asarray([[0.0, 2.0], [2.0, 4.0]])   # (N=2, P=2)
+    >>> FusionCenter().combine(varphi).tolist()
+    [[1.0, 3.0], [1.0, 3.0]]
+    """
 
     def combine(self, varphi, *, axis=None, local=None):
         if axis is None:
@@ -172,7 +252,13 @@ class FusionCenter(_CombineTopology):
 
 
 class Isolated(_CombineTopology):
-    """No communication (noncoop-VB): every node keeps its own iterate."""
+    """No communication (noncoop-VB): every node keeps its own iterate.
+
+    >>> import jax.numpy as jnp
+    >>> varphi = jnp.asarray([[1.0], [2.0]])
+    >>> bool(jnp.all(Isolated().combine(varphi) == varphi))
+    True
+    """
 
     def combine(self, varphi, *, axis=None, local=None):
         return varphi
@@ -180,7 +266,13 @@ class Isolated(_CombineTopology):
 
 class Diffusion(_CombineTopology):
     """Arbitrary-graph diffusion combine phi_i <- sum_j w_ij varphi_j
-    (Eq. 27b) with a row-stochastic weight matrix (e.g. Eq. 47)."""
+    (Eq. 27b) with a row-stochastic weight matrix (e.g. Eq. 47).
+
+    >>> import jax.numpy as jnp
+    >>> W = jnp.asarray([[0.5, 0.5], [0.5, 0.5]])        # 2-node clique
+    >>> Diffusion(W).combine(jnp.asarray([[0.0], [4.0]])).tolist()
+    [[2.0], [2.0]]
+    """
 
     def __init__(self, weights: jnp.ndarray):
         self.weights = weights
@@ -201,7 +293,16 @@ class Diffusion(_CombineTopology):
 class RingDiffusion(_CombineTopology):
     """Diffusion on the cycle graph — the TPU-native topology where the
     communication graph IS the ICI ring along a mesh axis, so the combine
-    is two ppermutes and a weighted sum (no all_gather, no all_reduce)."""
+    is two ppermutes and a weighted sum (no all_gather, no all_reduce).
+
+    With the default Eq. 47 ring weights each node keeps 1/3 and takes 1/3
+    from each ring neighbour; any `w_self` splits the rest evenly:
+
+    >>> import jax.numpy as jnp
+    >>> varphi = jnp.asarray([[4.0], [8.0], [12.0]])
+    >>> RingDiffusion(w_self=0.5).combine(varphi).tolist()
+    [[7.0], [8.0], [9.0]]
+    """
 
     def __init__(self, w_self: float = 1.0 / 3.0):
         self.w_self = w_self
@@ -215,8 +316,39 @@ class RingDiffusion(_CombineTopology):
                          + jnp.roll(varphi, -1, axis=0)))
 
 
+class ConsensusDiagnostics(NamedTuple):
+    """Per-iteration observability record of `ADMMConsensus` (each field
+    gains a leading time axis T once stacked by the scan; see
+    docs/admm-convergence.md for how to read it).
+
+    primal_resid : ||r^t|| — RMS norm of the Eq. 39 disagreement
+        sum_{j in N_i}(phi_i - phi_j), in natural-parameter space.  Per
+        block (T, n_blocks) when `per_block=True`, else (T,).
+    dual_resid : ||s^t|| = ||rho (phi^t - phi^{t-1})|| — Boyd's dual
+        residual; same shape convention as `primal_resid`.
+    rho : the penalty trajectory ((T,) scalar or (T, n_blocks)).
+    kappa : the effective dual step-size ramp actually applied (0 while the
+        dual warmup gate is closed; restarts after a ramp reset).
+    clip_count : number of nodes whose Eq. 38b projection actually moved
+        the primal iterate (eigen-clip / domain clamp activation).
+    reset_count : number of nodes whose duals were reset/decayed this
+        iteration (`dual_reset`); 0 when the feature is off.
+    dual_on : 1.0 once the dual ascent is active (warmup gate open).
+    """
+
+    primal_resid: jnp.ndarray
+    dual_resid: jnp.ndarray
+    rho: jnp.ndarray
+    kappa: jnp.ndarray
+    clip_count: jnp.ndarray
+    reset_count: jnp.ndarray
+    dual_on: jnp.ndarray
+
+
 class ADMMConsensus:
-    """Consensus ADMM in natural-parameter space (Algorithm 2).
+    """Consensus ADMM in natural-parameter space (Algorithm 2), plus the
+    adaptive-penalty subsystem (all features off by default, which keeps
+    Algorithm 2 bit-verbatim — golden-parity-tested).
 
     Per iteration and node i with neighbours N_i (|N_i| = d_i):
 
@@ -226,35 +358,136 @@ class ADMMConsensus:
       (39)  lam_i <- lam_i + kappa_t rho/2 sum_{j in N_i}(phi_i - phi_j)
       (40)  kappa_t = 1 - 1/(1 + xi t)^2
 
-    `lam_max` (off by default — None keeps Algorithm 2 verbatim) clips each
-    dual coordinate to [-lam_max * |phi*_i|, +lam_max * |phi*_i|] after the
-    Eq. 39 ascent.  The duals only need to cancel the disagreement part of
-    phi*, so a bound proportional to the local optimum's magnitude damps
-    the wind-up observed on imbalanced instances (|lam| growing to O(|phi|)
-    and the Eq. 38b eigen-clip then amplifying the oscillation — see
-    ROADMAP "dVB-ADMM numerics").
+    Adaptive-penalty subsystem (the ROADMAP-named candidates, composable
+    and individually switchable; diagnosis + recipes in
+    docs/admm-convergence.md):
+
+    * `adaptive_rho` — residual-balancing (Boyd Sec. 3.4.1) in
+      natural-parameter space: every `adapt_every` iterations, grow rho by
+      `tau_incr` when the primal residual dominates (||r|| > mu ||s||),
+      shrink by `tau_decr` when the dual residual dominates, clipped to
+      [rho_min, rho_max].  Enabling it also turns on the dual warmup and
+      dual reset below (their "auto" default) — the blessed configuration
+      that converges on the paper's GMM instances.
+    * `dual_warmup` — residual-gated dual activation: the Eq. 39 ascent
+      (and rho adaptation) stays off until the dual residual has fallen
+      under `warmup_tol` x the primal residual for `warmup_window`
+      consecutive iterations, i.e. until the penalty-method phase has
+      equilibrated and the remaining error IS disagreement.  The Eq. 40
+      ramp then counts from activation.  This is what stops the dual
+      wind-up: ascending while phi*_i still moves with the E-step is what
+      destabilised plain Algorithm 2.
+    * `per_block` — per-block dual scaling: rho becomes one penalty per
+      natural-parameter block of the model (`model.block_labels()`; for
+      the GMM: alpha | nu | beta | beta*m | W^-1), each balanced
+      independently, so the O(1e3) W^-1 coordinates cannot drown the O(1)
+      blocks in the residual norms.
+    * `dual_reset` — on Eq. 38b eigen-clip activation, multiply the
+      affected node's duals by this factor (0.0 = full reset) and restart
+      the kappa ramp: a projection that moved the iterate invalidates the
+      geometry the duals were accumulated in.
+    * `lam_max` — clip each dual coordinate to +-lam_max * |phi*_i| after
+      the ascent (the PR-2 damping; superseded by the warmup gate but kept
+      composable).
+
+    Example — the convergent adaptive configuration, vs verbatim
+    Algorithm 2:
+
+    >>> import jax.numpy as jnp
+    >>> adj = jnp.asarray([[0.0, 1.0], [1.0, 0.0]])      # two-node graph
+    >>> plain = ADMMConsensus(adj)                       # Algorithm 2
+    >>> adapt = ADMMConsensus(adj, adaptive_rho=True)    # the subsystem
+    >>> (plain.emits_diagnostics, adapt.emits_diagnostics)
+    (True, True)
+    >>> adapt.dual_warmup, adapt.dual_reset             # "auto" resolution
+    (True, 0.0)
+    >>> plain.dual_warmup, plain.dual_reset
+    (False, None)
 
     Algorithm 2 has no natural-gradient step, so `run_vb`'s `schedule` does
     not apply to this topology (run_vb rejects a non-default one).
     """
 
     uses_schedule = False
+    emits_diagnostics = True
 
     def __init__(self, adj: jnp.ndarray, rho: float = 0.5, xi: float = 0.05,
-                 project: bool = True, lam_max: float | None = None):
+                 project: bool = True, lam_max: float | None = None,
+                 adaptive_rho: bool = False, mu: float = 10.0,
+                 tau_incr: float = 2.0, tau_decr: float = 2.0,
+                 adapt_every: int = 10, rho_min: float = 1e-3,
+                 rho_max: float = 1e3, per_block: bool = False,
+                 dual_warmup: bool | str = "auto", warmup_tol: float = 1e-3,
+                 warmup_window: int = 10,
+                 dual_reset: float | None | str = "auto",
+                 clip_tol: float = 1e-9):
         self.adj = adj
         self.rho = rho
         self.xi = xi
         self.project = project
         self.lam_max = lam_max
+        self.adaptive_rho = adaptive_rho
+        self.mu = mu
+        self.tau_incr = tau_incr
+        self.tau_decr = tau_decr
+        self.adapt_every = adapt_every
+        self.rho_min = rho_min
+        self.rho_max = rho_max
+        self.per_block = per_block
+        self.dual_warmup = (adaptive_rho if dual_warmup == "auto"
+                            else bool(dual_warmup))
+        self.warmup_tol = warmup_tol
+        self.warmup_window = warmup_window
+        self.dual_reset = ((0.0 if adaptive_rho else None)
+                           if dual_reset == "auto" else dual_reset)
+        self.clip_tol = clip_tol
+
+    @property
+    def _plain(self) -> bool:
+        """True = Algorithm 2 verbatim (the bit-exact golden path)."""
+        return not (self.adaptive_rho or self.per_block or self.dual_warmup
+                    or self.dual_reset is not None)
 
     def shard_inputs(self) -> dict:
         return {"adj": self.adj}
 
-    def init_carry(self, phi0: jnp.ndarray):
-        return jnp.zeros_like(phi0)                   # duals lambda_i
+    def init_carry(self, phi0: jnp.ndarray, model=None):
+        lam0 = jnp.zeros_like(phi0)                   # duals lambda_i
+        if self._plain:
+            return lam0
+        dt = phi0.dtype
+        if self.per_block:
+            import numpy as np
+            n_blocks = int(np.max(model.block_labels())) + 1
+            rho0 = jnp.full((n_blocks,), self.rho, dt)
+        else:
+            rho0 = jnp.asarray(self.rho, dt)
+        # (duals, rho, consecutive-stable count, iters since dual
+        #  activation, gate-open flag)
+        return (lam0, rho0, jnp.asarray(0, jnp.int32), jnp.asarray(0.0, dt),
+                jnp.asarray(not self.dual_warmup))
 
-    def step(self, model, phi, lam, phi_star, t, schedule: Schedule, *,
+    def carry_specs(self, axis: str):
+        from jax.sharding import PartitionSpec as P
+        if self._plain:
+            return P(axis)
+        return (P(axis), P(), P(), P(), P())
+
+    # -- residual norms in natural-parameter space ------------------------
+    def _block_norms(self, z, onehot, *, axis=None):
+        """RMS norm of the (N, P) stack z — per block ((n_blocks,)) when
+        `per_block`, else a scalar — with the node axis reduced globally
+        under the mesh executor."""
+        sq = jnp.sum(z * z, axis=0)                   # (P,)
+        n = jnp.asarray(z.shape[0], z.dtype)
+        if axis is not None:
+            sq = jax.lax.psum(sq, axis)
+            n = jax.lax.psum(n, axis)
+        if onehot is not None:
+            return jnp.sqrt((sq @ onehot) / (jnp.sum(onehot, 0) * n))
+        return jnp.sqrt(jnp.sum(sq) / (n * z.shape[1]))
+
+    def step(self, model, phi, carry, phi_star, t, schedule: Schedule, *,
              axis=None, local=None):
         adj_rows = self.adj if axis is None else local["adj"]
         deg = jnp.sum(adj_rows, axis=1)               # |N_i|
@@ -264,22 +497,116 @@ class ADMMConsensus:
                 return adj_rows @ z
             return adj_rows @ jax.lax.all_gather(z, axis, tiled=True)
 
-        # (38a) primal
+        if self._plain:
+            lam = carry
+            # (38a) primal
+            phi_hat = (phi_star - 2.0 * lam
+                       + self.rho * (deg[:, None] * phi + neigh_sum(phi)))
+            phi_hat = phi_hat / (1.0 + 2.0 * self.rho * deg)[:, None]
+            if self.project:
+                phi_new = jax.vmap(model.project_to_domain)(phi_hat)  # (38b)
+            else:
+                phi_new = phi_hat
+            # (39) dual ascent with the kappa_t ramp (40)
+            kappa = kappa_schedule(t.astype(phi.dtype) + 1.0, self.xi)
+            resid = deg[:, None] * phi_new - neigh_sum(phi_new)
+            lam_new = lam + kappa * self.rho / 2.0 * resid
+            if self.lam_max is not None:
+                bound = self.lam_max * jnp.abs(phi_star)
+                lam_new = jnp.clip(lam_new, -bound, bound)
+            clip_count = jnp.sum(
+                jnp.max(jnp.abs(phi_new - phi_hat), axis=1) > self.clip_tol)
+            if axis is not None:
+                clip_count = jax.lax.psum(clip_count, axis)
+            diag = ConsensusDiagnostics(
+                primal_resid=self._block_norms(resid, None, axis=axis),
+                dual_resid=self._block_norms(self.rho * (phi_new - phi),
+                                             None, axis=axis),
+                rho=jnp.asarray(self.rho, phi.dtype),
+                kappa=kappa.astype(phi.dtype),
+                clip_count=clip_count,
+                reset_count=jnp.zeros((), jnp.int32),
+                dual_on=jnp.ones((), phi.dtype))
+            return phi_new, lam_new, diag
+        return self._adaptive_step(model, phi, carry, phi_star, deg,
+                                   neigh_sum, axis=axis)
+
+    def _adaptive_step(self, model, phi, carry, phi_star, deg, neigh_sum, *,
+                       axis=None):
+        lam, rho_vec, stable, t_act, active = carry
+        dt = phi.dtype
+        if self.per_block:
+            labels = model.block_labels()
+            onehot = jax.nn.one_hot(labels, rho_vec.shape[0], dtype=dt)
+            rho_coord = rho_vec[labels]               # (P,)
+        else:
+            onehot = None
+            rho_coord = rho_vec                       # ()
+
+        # (38a) primal, with the (possibly per-block) penalty
         phi_hat = (phi_star - 2.0 * lam
-                   + self.rho * (deg[:, None] * phi + neigh_sum(phi)))
-        phi_hat = phi_hat / (1.0 + 2.0 * self.rho * deg)[:, None]
+                   + rho_coord * (deg[:, None] * phi + neigh_sum(phi)))
+        phi_hat = phi_hat / (1.0 + 2.0 * rho_coord * deg[:, None])
         if self.project:
             phi_new = jax.vmap(model.project_to_domain)(phi_hat)  # (38b)
         else:
             phi_new = phi_hat
-        # (39) dual ascent with the kappa_t ramp (40)
-        kappa = kappa_schedule(t.astype(phi.dtype) + 1.0, self.xi)
+        clip_active = (jnp.max(jnp.abs(phi_new - phi_hat), axis=1)
+                       > self.clip_tol)               # (N,) eigen-clip fired
+        any_clip = jnp.any(clip_active)
+        if axis is not None:
+            any_clip = jax.lax.psum(any_clip.astype(dt), axis) > 0.0
+
         resid = deg[:, None] * phi_new - neigh_sum(phi_new)
-        lam_new = lam + kappa * self.rho / 2.0 * resid
+        r_norm = self._block_norms(resid, onehot, axis=axis)
+        s_norm = self._block_norms(rho_coord * (phi_new - phi), onehot,
+                                   axis=axis)
+        r_tot = jnp.sqrt(jnp.sum(r_norm ** 2))
+        s_tot = jnp.sqrt(jnp.sum(s_norm ** 2))
+
+        # -- dual warmup gate: open once s << r for warmup_window iters --
+        if self.dual_warmup:
+            stable = jnp.where(s_tot < self.warmup_tol * r_tot,
+                               stable + 1, 0)
+            active = active | (stable >= self.warmup_window)
+        t_act = jnp.where(active, t_act + 1.0, 0.0)
+        if self.dual_reset is not None:
+            t_act = jnp.where(any_clip, 0.0, t_act)   # ramp reset on clip
+        kappa = jnp.where(t_act > 0.0,
+                          kappa_schedule(t_act, self.xi), 0.0).astype(dt)
+
+        # (39) dual ascent
+        lam_new = lam + kappa * rho_coord / 2.0 * resid
         if self.lam_max is not None:
             bound = self.lam_max * jnp.abs(phi_star)
             lam_new = jnp.clip(lam_new, -bound, bound)
-        return phi_new, lam_new
+        if self.dual_reset is not None:
+            lam_new = jnp.where(clip_active[:, None],
+                                self.dual_reset * lam_new, lam_new)
+            reset_count = jnp.sum(clip_active)
+        else:
+            reset_count = jnp.zeros((), jnp.int32)
+        if axis is not None:
+            reset_count = jax.lax.psum(reset_count, axis)
+        clip_count = jnp.sum(clip_active)
+        if axis is not None:
+            clip_count = jax.lax.psum(clip_count, axis)
+
+        # -- residual balancing (Boyd Sec. 3.4.1), gated on dual activity --
+        if self.adaptive_rho:
+            balanced = residual_balanced_rho(
+                rho_vec, r_norm, s_norm, mu=self.mu, tau_incr=self.tau_incr,
+                tau_decr=self.tau_decr, rho_min=self.rho_min,
+                rho_max=self.rho_max)
+            do = active & (jnp.mod(t_act, float(self.adapt_every)) == 0.0) \
+                & (t_act > 0.0)
+            rho_vec = jnp.where(do, balanced, rho_vec)
+
+        diag = ConsensusDiagnostics(
+            primal_resid=r_norm, dual_resid=s_norm, rho=rho_vec,
+            kappa=kappa, clip_count=clip_count, reset_count=reset_count,
+            dual_on=active.astype(dt))
+        return phi_new, (lam_new, rho_vec, stable, t_act, active), diag
 
 
 # ---------------------------------------------------------------------------
@@ -306,6 +633,7 @@ class VBRun(NamedTuple):
     kl_std: jnp.ndarray         # (T,)
     kl_nodes: jnp.ndarray       # (T, N) per-node trajectory
     consensus_err: Any = None   # (T,)   mean_i ||phi_i - mean_j phi_j||^2
+    consensus_diag: Any = None  # ConsensusDiagnostics (ADMM topologies)
 
 
 class MeshExecutor(NamedTuple):
@@ -326,8 +654,9 @@ def _scan_steps(model, data, topology, schedule, replication, ref_phi,
     def step(carry, t):
         phi, aux = carry
         phi_star = model.local_optimum(data, phi, replication)
-        phi_new, aux_new = topology.step(model, phi, aux, phi_star, t,
-                                         schedule, axis=axis, local=local)
+        phi_new, aux_new, diag = topology.step(model, phi, aux, phi_star, t,
+                                               schedule, axis=axis,
+                                               local=local)
         phi_m = phi_new if metric_nodes is None else phi_new[:metric_nodes]
         kl = kl_to_reference(model, phi_m, ref_phi)
         if diagnostics:
@@ -339,11 +668,12 @@ def _scan_steps(model, data, topology, schedule, replication, ref_phi,
                 msd = jax.lax.pmean(msd, axis)
         else:
             msd = jnp.zeros((), phi_new.dtype)
-        return (phi_new, aux_new), (kl, msd)
+            diag = None
+        return (phi_new, aux_new), (kl, msd, diag)
 
-    (phi, _), (kls, msds) = jax.lax.scan(step, (phi0, carry0),
-                                         jnp.arange(n_iters))
-    return phi, kls, msds
+    (phi, _), (kls, msds, diags) = jax.lax.scan(step, (phi0, carry0),
+                                                jnp.arange(n_iters))
+    return phi, kls, msds, diags
 
 
 def run_vb(model, data, topology, *, n_iters: int,
@@ -383,7 +713,24 @@ def run_vb(model, data, topology, *, n_iters: int,
         executor only.
 
     Returns a `VBRun` regardless of executor; the two paths are numerically
-    equivalent (asserted in tests/test_engine.py).
+    equivalent (asserted in tests/test_engine.py).  Topologies that emit
+    per-iteration diagnostics (`ADMMConsensus`) populate
+    `VBRun.consensus_diag` with a `ConsensusDiagnostics` record.
+
+    Example (Bayesian linear regression, whose local optima are a constant
+    (N, P) stack, over a two-node fusion centre):
+
+    >>> import jax.numpy as jnp
+    >>> from repro.core import linreg
+    >>> from repro.core.model import LinRegModel
+    >>> mdl = LinRegModel(linreg.prior(2))
+    >>> phi_star = jnp.stack([mdl.init_phi() + 1.0, mdl.init_phi() - 1.0])
+    >>> run = run_vb(mdl, phi_star, FusionCenter(), n_iters=3,
+    ...              schedule=ONE_SHOT)
+    >>> run.phi.shape, run.kl_nodes.shape
+    ((2, 8), (3, 2))
+    >>> bool(jnp.all(run.phi[0] == run.phi[1]))          # consensus: exact
+    True
     """
     if backend is not None:
         with_backend = getattr(model, "with_backend", None)
@@ -406,16 +753,17 @@ def run_vb(model, data, topology, *, n_iters: int,
     if init_phi is None:
         init_phi = jnp.broadcast_to(model.init_phi(),
                                     (n_nodes, model.flat_dim))
-    carry0 = topology.init_carry(init_phi)
+    carry0 = topology.init_carry(init_phi, model)
 
     if executor is None:
-        phi, kls, msds = _scan_steps(
+        phi, kls, msds, diags = _scan_steps(
             model, data, topology, schedule, replication, ref_phi,
             n_iters, init_phi, carry0, diagnostics=diagnostics,
             metric_nodes=metric_nodes)
         return VBRun(phi=phi, kl_mean=jnp.mean(kls, 1),
                      kl_std=jnp.std(kls, 1), kl_nodes=kls,
-                     consensus_err=msds if diagnostics else None)
+                     consensus_err=msds if diagnostics else None,
+                     consensus_diag=diags)
 
     return _run_vb_sharded(model, data, topology, schedule, replication,
                            ref_phi, n_iters, init_phi, carry0,
@@ -427,27 +775,39 @@ def _run_vb_sharded(model, data, topology, schedule, replication, ref_phi,
                     diagnostics: bool) -> VBRun:
     """shard_map executor: node axis sharded over `executor.axis`."""
     mesh, axis = executor.mesh, executor.axis
+    from jax.sharding import PartitionSpec
     from repro.dist import sharding
 
     local_inputs = topology.shard_inputs()          # dict of (N, ...) arrays
     local_keys = tuple(sorted(local_inputs))
     has_carry = carry0 is not None
+    # diagnostics pytrees are reduced with psum/pmean inside the step, so
+    # every shard returns the identical (replicated) value
+    has_diag = diagnostics and getattr(topology, "emits_diagnostics", False)
 
     in_specs, out_specs = sharding.vb_node_specs(
-        data, axis=axis, has_carry=has_carry, n_local=len(local_keys))
+        data, axis=axis, has_carry=has_carry, n_local=len(local_keys),
+        carry_specs=topology.carry_specs(axis) if has_carry else None)
+    if has_diag:
+        out_specs = out_specs + (PartitionSpec(),)
 
     def run(data_l, phi_l, carry_l, *local_vals):
         local = dict(zip(local_keys, local_vals))
-        phi, kls, msds = _scan_steps(
+        phi, kls, msds, diags = _scan_steps(
             model, data_l, topology, schedule, replication, ref_phi,
             n_iters, phi_l, carry_l if has_carry else None,
             axis=axis, local=local, diagnostics=diagnostics)
+        if has_diag:
+            return phi, kls, msds, diags
         return phi, kls, msds
 
     fn = compat.shard_map(run, mesh=mesh, in_specs=in_specs,
                           out_specs=out_specs, check_vma=False)
-    phi, kls, msds = fn(data, init_phi,
-                        carry0 if has_carry else jnp.zeros((), init_phi.dtype),
-                        *(local_inputs[k] for k in local_keys))
+    out = fn(data, init_phi,
+             carry0 if has_carry else jnp.zeros((), init_phi.dtype),
+             *(local_inputs[k] for k in local_keys))
+    phi, kls, msds = out[:3]
+    diags = out[3] if has_diag else None
     return VBRun(phi=phi, kl_mean=jnp.mean(kls, 1), kl_std=jnp.std(kls, 1),
-                 kl_nodes=kls, consensus_err=msds if diagnostics else None)
+                 kl_nodes=kls, consensus_err=msds if diagnostics else None,
+                 consensus_diag=diags)

@@ -85,6 +85,28 @@ def flat_dim(K: int, D: int) -> int:
     return K + K * (2 + D + D * D)
 
 
+#: names of the natural-parameter blocks of the flat GMM message, in the
+#: order of the `block_labels` ids: the Dirichlet block, then per-component
+#: n1 (nu), n4 (beta), n3 (beta*m) and n2 (the W^-1 carrier).
+BLOCK_NAMES = ("alpha", "nu", "beta", "mean", "winv")
+
+
+def block_labels(K: int, D: int):
+    """(P,) int32 block-type label per coordinate of the flat message.
+
+    The flat natural-parameter vector mixes coordinates whose magnitudes
+    differ by orders (alpha ~ counts, n2 ~ -W^-1/2): per-block views let
+    the consensus layer compute residual norms and penalties per block
+    instead of letting the big blocks drown the small ones
+    (`engine.ADMMConsensus(per_block=True)`).  Labels index `BLOCK_NAMES`.
+    Returned as a host (numpy) array: it is static packing structure, and
+    consumers use it inside jit (block counts must stay concrete).
+    """
+    import numpy as np
+    per = [1, 2] + [3] * D + [4] * (D * D)
+    return np.asarray([0] * K + per * K, np.int32)
+
+
 def pack_natural(q: GMMPosterior) -> jnp.ndarray:
     """GMMPosterior -> flat natural-parameter message (Eq. 45)."""
     K, D = q.K, q.D

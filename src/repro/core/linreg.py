@@ -56,6 +56,18 @@ def flat_dim(D: int) -> int:
     return 2 + D + D * D
 
 
+#: block names of the flat Normal-Gamma message, in `block_labels` order:
+#: n1 (Gamma shape), n2 (Gamma rate carrier), n3 (V m), n4 (-V/2).
+BLOCK_NAMES = ("shape", "rate", "mean", "precision")
+
+
+def block_labels(D: int):
+    """(P,) int32 block-type label per coordinate (cf. expfam.block_labels);
+    a host (numpy) array — static structure, usable inside jit."""
+    import numpy as np
+    return np.asarray([0, 1] + [2] * D + [3] * (D * D), np.int32)
+
+
 def pack(q: NGPosterior) -> jnp.ndarray:
     n1 = q.a - 1.0 + q.D / 2.0
     n2 = -(q.b + 0.5 * q.m @ q.V @ q.m)

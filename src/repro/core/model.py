@@ -34,7 +34,21 @@ from repro.core.linreg import NGPosterior
 
 @runtime_checkable
 class ConjugateExpModel(Protocol):
-    """What the engine needs from a conjugate-exponential model."""
+    """What the engine needs from a conjugate-exponential model.
+
+    Any object with this surface runs under every topology and executor of
+    `engine.run_vb` — that is the paper's contribution-1 generality claim
+    as an API.  Example (the shipped GMM instance):
+
+    >>> from repro.core import expfam, model
+    >>> mdl = model.GMMModel(expfam.noninformative_prior(3, 2), K=3, D=2)
+    >>> isinstance(mdl, model.ConjugateExpModel)
+    True
+    >>> mdl.flat_dim                      # P of the Eq. 45 message
+    33
+    >>> mdl.init_phi().shape              # the prior, packed
+    (33,)
+    """
 
     @property
     def flat_dim(self) -> int:
@@ -70,6 +84,13 @@ class ConjugateExpModel(Protocol):
 
     def kl(self, phi: jnp.ndarray, phi_ref: jnp.ndarray) -> jnp.ndarray:
         """d(phi, phi_ref) of Eq. 46: KL(Q(.|phi) || P(.|phi_ref))."""
+        ...
+
+    def block_labels(self) -> jnp.ndarray:
+        """(P,) int32 block-type label per flat coordinate — the per-block
+        view of phi used by the adaptive consensus layer (per-block dual
+        scaling / residual norms).  Labels index the family's BLOCK_NAMES.
+        """
         ...
 
 
@@ -121,6 +142,9 @@ class GMMModel:
 
     def kl(self, phi: jnp.ndarray, phi_ref: jnp.ndarray) -> jnp.ndarray:
         return expfam.gmm_kl_flat(phi, phi_ref, self.K, self.D)
+
+    def block_labels(self) -> jnp.ndarray:
+        return expfam.block_labels(self.K, self.D)
 
 
 # ---------------------------------------------------------------------------
@@ -188,3 +212,6 @@ class LinRegModel:
 
     def kl(self, phi: jnp.ndarray, phi_ref: jnp.ndarray) -> jnp.ndarray:
         return linreg.kl(self.unpack(phi), self.unpack(phi_ref))
+
+    def block_labels(self) -> jnp.ndarray:
+        return linreg.block_labels(self.D)

@@ -79,13 +79,20 @@ def param_shardings(tree, mesh: Mesh, *, fsdp: bool = False,
     return jax.tree_util.tree_map_with_path(one, tree)
 
 
-def vb_node_specs(data, *, axis: str, has_carry: bool, n_local: int):
+def vb_node_specs(data, *, axis: str, has_carry: bool, n_local: int,
+                  carry_specs=None):
     """(in_specs, out_specs) for the VB engine's shard_map executor
     (core/engine._run_vb_sharded): every per-node array — the data pytree's
     leaves, the phi iterate, the topology carry (ADMM duals) and the
     topology's `shard_inputs` rows (weight/adjacency rows) — shards its
     leading node axis over the mesh axis `axis`; outputs are
     (phi (N, P), kl trajectories (T, N), consensus error (T,)).
+
+    `carry_specs` overrides the default node-sharded carry spec for
+    topologies whose carry mixes per-node state with replicated scalars
+    (the adaptive `ADMMConsensus` carries duals (N, P) plus the penalty /
+    warmup-gate state, which every shard holds identically — see
+    `ADMMConsensus.carry_specs`).
 
     One home for the engine's partitioning rule so the compute backends
     (core/backends.py) and the executors agree on what "node-sharded"
@@ -94,7 +101,10 @@ def vb_node_specs(data, *, axis: str, has_carry: bool, n_local: int):
     """
     node = P(axis)
     data_specs = jax.tree_util.tree_map(lambda _: node, data)
-    carry_spec = node if has_carry else P()
+    if has_carry:
+        carry_spec = carry_specs if carry_specs is not None else node
+    else:
+        carry_spec = P()
     in_specs = (data_specs, node, carry_spec) + (node,) * n_local
     out_specs = (node, P(None, axis), P(None))
     return in_specs, out_specs

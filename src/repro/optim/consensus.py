@@ -27,7 +27,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.engine import ring_combine, ring_neighbors
+from repro.core.engine import (residual_balanced_rho, ring_combine,
+                               ring_neighbors)
 from repro.dist import compat
 
 _ring_neighbors = ring_neighbors   # backward-compatible alias
@@ -57,12 +58,15 @@ def admm_init_duals(params):
 
 
 def admm_step(params_star, params_prev, duals, axis: str, *, rho: float,
-              kappa):
+              kappa, return_residuals: bool = False):
     """One primal+dual ADMM consensus round.
 
     params_star: locally-optimised parameters (phi*_i of Eq. 18 — here the
     post-AdamW parameters).  params_prev: last round's consensus iterate.
-    Returns (new_params, new_duals).
+    Returns (new_params, new_duals), plus the global (||r||, ||s||) RMS
+    residual norms when `return_residuals` — computed from the SAME ring
+    exchange the dual ascent already performs, so the observability is
+    communication-free.
     """
     deg = 2.0
 
@@ -74,13 +78,67 @@ def admm_step(params_star, params_prev, duals, axis: str, *, rho: float,
 
     new_params = jax.tree.map(primal, params_star, params_prev, duals)
 
-    def dual(lam, p_new):
-        left, right = _ring_neighbors(p_new.astype(jnp.float32), axis)
-        resid = deg * p_new.astype(jnp.float32) - left - right
-        return lam + kappa * rho / 2.0 * resid
+    def ring_resid(p_new):                    # Eq. 39: 2 p_i - p_{i-1} - p_{i+1}
+        pf = p_new.astype(jnp.float32)
+        left, right = _ring_neighbors(pf, axis)
+        return deg * pf - left - right
 
-    new_duals = jax.tree.map(dual, duals, new_params)
-    return new_params, new_duals
+    resid = jax.tree.map(ring_resid, new_params)
+    new_duals = jax.tree.map(lambda lam, r: lam + kappa * rho / 2.0 * r,
+                             duals, resid)
+    if not return_residuals:
+        return new_params, new_duals
+    return new_params, new_duals, _rms_norms(
+        jax.tree.leaves(resid),
+        [rho * (pn.astype(jnp.float32) - pp.astype(jnp.float32))
+         for pn, pp in zip(jax.tree.leaves(new_params),
+                           jax.tree.leaves(params_prev))], axis)
+
+
+# ---------------------------------------------------------------------------
+# Adaptive penalty for the training-layer ADMM mode — the VB engine's
+# residual-balancing rule (engine.residual_balanced_rho) on ring residuals
+# ---------------------------------------------------------------------------
+def _rms_norms(r_leaves, s_leaves, axis: str):
+    """Global RMS norms of two residual leaf-lists (psum over `axis`)."""
+    r_sq = sum(jnp.sum(r * r) for r in r_leaves)
+    s_sq = sum(jnp.sum(s * s) for s in s_leaves)
+    n = sum(r.size for r in r_leaves)
+    r_sq = jax.lax.psum(r_sq, axis)
+    s_sq = jax.lax.psum(s_sq, axis)
+    n = jax.lax.psum(jnp.asarray(n, jnp.float32), axis)
+    return jnp.sqrt(r_sq / n), jnp.sqrt(s_sq / n)
+
+
+def admm_residual_norms(params_new, params_prev, axis: str, *, rho):
+    """(||r||, ||s||) of one ADMM consensus round on the ring, as global
+    RMS norms over all tensors and replicas (psum over `axis`).
+
+    r is the Eq. 39 disagreement 2 p_i - p_{i-1} - p_{i+1}; s is Boyd's
+    dual residual rho (p^t - p^{t-1}).  Feed them to `adapt_rho` between
+    training steps to residual-balance `rho` exactly like the VB engine's
+    `ADMMConsensus(adaptive_rho=True)` does per VB iteration.  (Inside
+    `admm_step(return_residuals=True)` the same norms ride along on the
+    dual update's own ring exchange — prefer that form on a hot path.)
+    """
+    r_leaves, s_leaves = [], []
+    for p_new, p_prev in zip(jax.tree.leaves(params_new),
+                             jax.tree.leaves(params_prev)):
+        pf = p_new.astype(jnp.float32)
+        left, right = _ring_neighbors(pf, axis)
+        r_leaves.append(2.0 * pf - left - right)
+        s_leaves.append(rho * (pf - p_prev.astype(jnp.float32)))
+    return _rms_norms(r_leaves, s_leaves, axis)
+
+
+def adapt_rho(rho, r_norm, s_norm, *, mu: float = 10.0,
+              tau_incr: float = 2.0, tau_decr: float = 2.0,
+              rho_min: float = 1e-3, rho_max: float = 1e3):
+    """Residual-balance the training-layer ADMM penalty (Boyd Sec. 3.4.1);
+    thin alias of the engine rule so both layers share one implementation."""
+    return residual_balanced_rho(rho, r_norm, s_norm, mu=mu,
+                                 tau_incr=tau_incr, tau_decr=tau_decr,
+                                 rho_min=rho_min, rho_max=rho_max)
 
 
 # ---------------------------------------------------------------------------

@@ -170,15 +170,23 @@ def _consensus_step(cfg, mesh: Mesh, dp_mode: str, axis: str, hyper,
         if dp_mode == "diffusion":
             p_new = consensus.diffusion_combine(p_star, axis, hyper.w_self)
             d_new = None
+            r_norm = s_norm = jnp.zeros((), jnp.float32)
         else:
             kap = schedules.kappa(step.astype(jnp.float32) + 1.0, hyper.xi)
             duals_l = jax.tree.map(lambda p: p[0], duals)
-            p_new, d_new = consensus.admm_step(
-                p_star, params_l, duals_l, axis, rho=hyper.rho, kappa=kap)
+            # residual norms ride along on the dual update's own ring
+            # exchange — the same primal/dual residuals the VB engine
+            # records in ConsensusDiagnostics (feed to consensus.adapt_rho
+            # to residual-balance hyper.rho)
+            p_new, d_new, (r_norm, s_norm) = consensus.admm_step(
+                p_star, params_l, duals_l, axis, rho=hyper.rho, kappa=kap,
+                return_residuals=True)
             d_new = jax.tree.map(lambda p: p[None], d_new)
         metrics = {k: jax.lax.pmean(v, axis) for k, v in metrics.items()}
         metrics["consensus_residual"] = consensus.consensus_residual(
             p_new, axis)
+        metrics["admm_primal_resid"] = r_norm
+        metrics["admm_dual_resid"] = s_norm
         p_new = jax.tree.map(lambda p: p[None], p_new)
         new_opt = adamw.AdamState(
             mu=jax.tree.map(lambda p: p[None], new_opt.mu),
@@ -204,7 +212,9 @@ def _consensus_step(cfg, mesh: Mesh, dp_mode: str, axis: str, hyper,
         )
         out_specs = (in_specs[0], in_specs[1], in_specs[2],
                      leaf_specs({"loss": 0, "ce": 0, "grad_norm": 0, "lr": 0,
-                                 "consensus_residual": 0}, rep))
+                                 "consensus_residual": 0,
+                                 "admm_primal_resid": 0,
+                                 "admm_dual_resid": 0}, rep))
         # Partial-manual (auto "model" axis) where supported; otherwise run
         # fully manual — params replicate over "model" inside the body,
         # which is numerically identical (redundant compute per model

@@ -1,0 +1,287 @@
+"""The adaptive-penalty ADMM consensus subsystem (engine.ADMMConsensus
+with adaptive_rho / per_block / dual_warmup / dual_reset) and its
+ConsensusDiagnostics record.
+
+Convergence itself is asserted end-to-end in
+test_gmm_algorithms.test_paper_claims_ordering and
+test_system.test_end_to_end_distributed_vb_recovers_mixture; this file
+pins the MACHINERY: balancing direction, per-block parity, reset
+triggering, the warmup gate, and the diagnostics wiring."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import algorithms, engine, expfam, linreg, network
+from repro.core import model as model_lib
+from repro.data import synthetic
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _x64():
+    jax.config.update("jax_enable_x64", True)
+    yield
+    jax.config.update("jax_enable_x64", False)
+
+
+K, D = 3, 2
+ADJ2 = jnp.asarray([[0.0, 1.0], [1.0, 0.0]])     # the two-node graph
+
+
+@pytest.fixture(scope="module")
+def gmm_setup():
+    data = synthetic.paper_synthetic(n_nodes=8, n_per_node=20, seed=2)
+    prior = expfam.noninformative_prior(K, D, beta0=0.1, w0_scale=10.0)
+    adj, _ = network.random_geometric_graph(8, seed=4)
+    init_q = algorithms._perturbed_init(prior, data.x, jax.random.PRNGKey(3))
+    return data, prior, adj, init_q
+
+
+def _two_node_linreg_run(phi_star, topo, n_iters=40):
+    mdl = model_lib.LinRegModel(linreg.prior(2))
+    return engine.run_vb(mdl, phi_star, topo, n_iters=n_iters)
+
+
+# ---------------------------------------------------------------------------
+# residual balancing: rho moves in the expected direction
+# ---------------------------------------------------------------------------
+def test_balancing_rule_directions():
+    rho = jnp.asarray(1.0)
+    up = engine.residual_balanced_rho(rho, 100.0, 1.0)       # r >> mu s
+    down = engine.residual_balanced_rho(rho, 1.0, 100.0)     # s >> mu r
+    hold = engine.residual_balanced_rho(rho, 5.0, 1.0)       # balanced
+    assert float(up) == 2.0 and float(down) == 0.5 and float(hold) == 1.0
+    # bounds clip
+    assert float(engine.residual_balanced_rho(
+        jnp.asarray(900.0), 1e9, 1.0, rho_max=1e3)) == 1e3
+
+
+def test_adaptive_rho_grows_on_disagreeing_two_node_instance():
+    """Two linear-regression nodes with very different local optima: the
+    fixed points disagree (primal residual dominates once the per-node
+    subproblems settle), so residual balancing must GROW rho."""
+    mdl = model_lib.LinRegModel(linreg.prior(2))
+    base = mdl.init_phi()
+    phi_star = jnp.stack([base + 5.0, base - 5.0])
+    topo = engine.ADMMConsensus(ADJ2, rho=0.5, adaptive_rho=True,
+                                dual_warmup=False, dual_reset=None,
+                                adapt_every=1, project=False)
+    run = _two_node_linreg_run(phi_star, topo)
+    rho = np.asarray(run.consensus_diag.rho)
+    assert rho[-1] > rho[0]
+
+
+def test_adaptive_rho_shrinks_on_agreeing_two_node_instance():
+    """Two IDENTICAL nodes: zero disagreement by symmetry, but the iterate
+    still travels from the prior toward phi* (dual residual dominates), so
+    residual balancing must SHRINK rho."""
+    mdl = model_lib.LinRegModel(linreg.prior(2))
+    base = mdl.init_phi()
+    phi_star = jnp.stack([base + 5.0, base + 5.0])
+    topo = engine.ADMMConsensus(ADJ2, rho=0.5, adaptive_rho=True,
+                                dual_warmup=False, dual_reset=None,
+                                adapt_every=1, project=False)
+    run = _two_node_linreg_run(phi_star, topo)
+    rho = np.asarray(run.consensus_diag.rho)
+    assert rho[-1] < rho[0]
+    # and the primal residual really was ~0 (symmetric consensus)
+    assert float(run.consensus_diag.primal_resid[-1]) < 1e-8
+
+
+# ---------------------------------------------------------------------------
+# per-block dual scaling
+# ---------------------------------------------------------------------------
+def test_per_block_parity_when_balancing_disabled(gmm_setup):
+    """per_block=True with no adaptation is a pure reparameterisation (the
+    same rho in every block) — the trajectory must match the scalar path,
+    which itself is golden-parity-tested against Algorithm 2."""
+    data, prior, adj, init_q = gmm_setup
+    kw = dict(n_iters=25, K=K, D=D, init_q=init_q, rho=0.5)
+    scalar = algorithms.run_dvb_admm(data.x, data.mask, adj, prior, **kw)
+    pb = algorithms.run_dvb_admm(data.x, data.mask, adj, prior,
+                                 per_block=True, adaptive_rho=False,
+                                 dual_warmup=False, dual_reset=None, **kw)
+    np.testing.assert_allclose(np.asarray(pb.phi), np.asarray(scalar.phi),
+                               rtol=1e-12, atol=1e-12)
+
+
+def test_per_block_diagnostics_shapes(gmm_setup):
+    data, prior, adj, init_q = gmm_setup
+    run = algorithms.run_dvb_admm(data.x, data.mask, adj, prior, n_iters=10,
+                                  K=K, D=D, init_q=init_q,
+                                  adaptive_rho=True, per_block=True)
+    d = run.consensus_diag
+    n_blocks = len(expfam.BLOCK_NAMES)
+    assert d.rho.shape == (10, n_blocks)
+    assert d.primal_resid.shape == (10, n_blocks)
+    assert d.dual_resid.shape == (10, n_blocks)
+    assert d.clip_count.shape == (10,)
+
+
+def test_block_labels_cover_packing():
+    labels = expfam.block_labels(K, D)
+    assert labels.shape == (expfam.flat_dim(K, D),)
+    counts = np.bincount(labels, minlength=len(expfam.BLOCK_NAMES))
+    assert counts.tolist() == [K, K, K, K * D, K * D * D]
+    labels_lr = linreg.block_labels(3)
+    assert labels_lr.shape == (linreg.flat_dim(3),)
+    assert np.bincount(labels_lr).tolist() == [1, 1, 3, 9]
+
+
+# ---------------------------------------------------------------------------
+# dual reset on eigen-clip activation
+# ---------------------------------------------------------------------------
+def test_dual_reset_fires_iff_eigen_clip_activates(gmm_setup):
+    """reset_count must equal clip_count per iteration when the feature is
+    on, be all-zero when it is off, and a projection-free run never resets
+    (the trigger IS the Eq. 38b projection actually moving the iterate)."""
+    data, prior, adj, init_q = gmm_setup
+    kw = dict(n_iters=40, K=K, D=D, init_q=init_q, rho=0.5)
+    with_reset = algorithms.run_dvb_admm(
+        data.x, data.mask, adj, prior, adaptive_rho=False,
+        dual_warmup=False, dual_reset=0.5, **kw)
+    d = with_reset.consensus_diag
+    np.testing.assert_array_equal(np.asarray(d.reset_count),
+                                  np.asarray(d.clip_count))
+    assert int(jnp.sum(d.clip_count)) > 0      # the instance does clip
+    plain = algorithms.run_dvb_admm(data.x, data.mask, adj, prior, **kw)
+    assert int(jnp.sum(plain.consensus_diag.reset_count)) == 0
+    no_proj = algorithms.run_dvb_admm(
+        data.x, data.mask, adj, prior, project=False, adaptive_rho=False,
+        dual_warmup=False, dual_reset=0.5, **kw)
+    assert int(jnp.sum(no_proj.consensus_diag.reset_count)) == 0
+
+
+class _ClampedLinReg(model_lib.LinRegModel):
+    """LinRegModel whose Omega projection clamps every coordinate to
+    [-1, 1] — a deterministic stand-in for the GMM eigen-clip, so tests
+    can force the projection to activate on every iteration."""
+
+    def project_to_domain(self, phi):
+        return jnp.clip(phi, -1.0, 1.0)
+
+
+def test_dual_reset_restarts_ramp_while_projection_active():
+    """With an always-active projection and dual_reset on, the kappa ramp
+    must restart every iteration (stay 0) and every node resets — the
+    duals never get to accumulate in the invalidated geometry."""
+    mdl = _ClampedLinReg(linreg.prior(2))
+    base = mdl.init_phi()
+    phi_star = jnp.stack([base + 5.0, base - 5.0])   # way outside the clamp
+    topo = engine.ADMMConsensus(ADJ2, rho=0.5, adaptive_rho=False,
+                                dual_warmup=False, dual_reset=0.0)
+    run = engine.run_vb(mdl, phi_star, topo, n_iters=15)
+    d = run.consensus_diag
+    assert int(jnp.min(d.clip_count)) == 2           # both nodes, every iter
+    np.testing.assert_array_equal(np.asarray(d.reset_count),
+                                  np.asarray(d.clip_count))
+    assert bool(jnp.all(d.kappa == 0.0))             # ramp never ramps
+
+
+# ---------------------------------------------------------------------------
+# dual warmup gate
+# ---------------------------------------------------------------------------
+def test_warmup_gate_holds_duals_then_opens():
+    """Before the gate opens kappa is exactly 0 (pure penalty method);
+    dual_on is monotone; on an easy two-node instance the gate does open
+    and the duals then remove the penalty-method consensus bias."""
+    mdl = model_lib.LinRegModel(linreg.prior(2))
+    base = mdl.init_phi()
+    phi_star = jnp.stack([base + 2.0, base - 2.0])
+    topo = engine.ADMMConsensus(ADJ2, rho=0.5, dual_warmup=True,
+                                warmup_window=3, project=False,
+                                dual_reset=None)
+    run = _two_node_linreg_run(phi_star, topo, n_iters=120)
+    d = run.consensus_diag
+    on = np.asarray(d.dual_on)
+    kappa = np.asarray(d.kappa)
+    assert bool(np.all(np.diff(on) >= 0))                  # monotone gate
+    assert np.all(kappa[on == 0.0] == 0.0)                 # closed => no step
+    assert on[0] == 0.0 and on[-1] == 1.0                  # it did open
+    # duals alive and consensus exact-ish: both nodes at the phi* average
+    want = jnp.mean(phi_star, axis=0)
+    np.testing.assert_allclose(np.asarray(run.phi),
+                               np.asarray(jnp.stack([want, want])),
+                               rtol=1e-3, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# diagnostics wiring through run_vb
+# ---------------------------------------------------------------------------
+def test_diagnostics_threading(gmm_setup):
+    data, prior, adj, init_q = gmm_setup
+    W = network.nearest_neighbor_weights(adj)
+    kw = dict(n_iters=8, K=K, D=D, init_q=init_q)
+    admm = algorithms.run_dvb_admm(data.x, data.mask, adj, prior, **kw)
+    d = admm.consensus_diag
+    assert isinstance(d, engine.ConsensusDiagnostics)
+    for f in ("primal_resid", "dual_resid", "rho", "kappa"):
+        assert getattr(d, f).shape == (8,), f
+    assert bool(jnp.all(d.primal_resid >= 0))
+    # non-ADMM topologies emit no consensus diagnostics
+    dsvb = algorithms.run_dsvb(data.x, data.mask, W, prior, **kw)
+    assert dsvb.consensus_diag is None
+    # run_vb(diagnostics=False) suppresses the record entirely
+    mdl = model_lib.GMMModel(prior, K, D)
+    run = engine.run_vb(mdl, (data.x, data.mask),
+                        engine.ADMMConsensus(adj), n_iters=4,
+                        diagnostics=False)
+    assert run.consensus_diag is None and run.consensus_err is None
+
+
+# ---------------------------------------------------------------------------
+# training-layer lift (optim/consensus.py) shares the same balancing rule
+# ---------------------------------------------------------------------------
+def test_training_layer_adapt_rho_alias():
+    from repro.optim import consensus as oc
+    assert float(oc.adapt_rho(jnp.asarray(2.0), 100.0, 1.0)) == 4.0
+    assert float(oc.adapt_rho(jnp.asarray(2.0), 1.0, 100.0)) == 1.0
+
+
+CODE_RING_RESIDUALS = r"""
+import jax, jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+from repro.dist import compat
+from repro.optim import consensus as oc
+
+mesh = jax.make_mesh((4,), ("data",))
+params_new = {"w": jnp.arange(4.0).reshape(4, 1) * 10.0}   # disagreeing ring
+params_prev = jax.tree.map(lambda p: p + 1.0, params_new)
+
+def f(p_new, p_prev):
+    return oc.admm_residual_norms(p_new, p_prev, "data", rho=2.0)
+
+fn = compat.shard_map(f, mesh=mesh,
+                      in_specs=(P("data"), P("data")),
+                      out_specs=(P(), P()), check_vma=False)
+r, s = fn(params_new["w"], params_prev["w"])
+# r: node values 10*[0..3], ring disagreement 2p_i - p_{i-1} - p_{i+1}
+# -> [-20, 0, 0, 20] up to wraparound; rms = sqrt(mean([400,0,0,400]*100))
+import numpy as np
+want_r = np.sqrt(np.mean(np.asarray([40.0, 0.0, 0.0, -40.0]) ** 2))
+assert abs(float(r) - want_r) < 1e-5, (float(r), want_r)
+assert abs(float(s) - 2.0) < 1e-6, float(s)   # rho * |delta|, delta=1
+
+# admm_step(return_residuals=True): the ride-along norms must equal the
+# standalone helper evaluated on the step's own (new_params, params_prev)
+def g(p_star, p_prev, lam):
+    p_new, d_new, (r2, s2) = oc.admm_step(
+        {"w": p_star}, {"w": p_prev}, {"w": lam}, "data", rho=2.0,
+        kappa=0.3, return_residuals=True)
+    r3, s3 = oc.admm_residual_norms(p_new, {"w": p_prev}, "data", rho=2.0)
+    return r2, s2, r3, s3
+
+gn = compat.shard_map(g, mesh=mesh,
+                      in_specs=(P("data"), P("data"), P("data")),
+                      out_specs=(P(), P(), P(), P()), check_vma=False)
+r2, s2, r3, s3 = gn(params_new["w"], params_prev["w"],
+                    jnp.zeros_like(params_new["w"]))
+assert abs(float(r2) - float(r3)) < 1e-5, (float(r2), float(r3))
+assert abs(float(s2) - float(s3)) < 1e-5, (float(s2), float(s3))
+print("OK")
+"""
+
+
+def test_training_layer_residual_norms_on_ring(subproc):
+    out = subproc(CODE_RING_RESIDUALS, n_devices=4)
+    assert "OK" in out

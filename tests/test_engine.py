@@ -263,6 +263,9 @@ for name, topo, kw in [
     ("diffusion", engine.Diffusion(W), dict(schedule=engine.Schedule())),
     ("ring", engine.RingDiffusion(), dict(schedule=engine.Schedule())),
     ("admm", engine.ADMMConsensus(adj), {}),
+    ("admm-adaptive", engine.ADMMConsensus(adj, adaptive_rho=True), {}),
+    ("admm-adaptive-pb",
+     engine.ADMMConsensus(adj, adaptive_rho=True, per_block=True), {}),
     ("fusion", engine.FusionCenter(), dict(schedule=engine.ONE_SHOT)),
 ]:
     a = engine.run_vb(mdl, (data.x, data.mask), topo, n_iters=25, **kw)
@@ -272,6 +275,12 @@ for name, topo, kw in [
     assert err < 1e-8, f"{name} phi err {err}"
     cerr = float(jnp.max(jnp.abs(a.consensus_err - b.consensus_err)))
     assert cerr < 1e-8, f"{name} consensus err {cerr}"
+    if a.consensus_diag is not None:
+        for f in engine.ConsensusDiagnostics._fields:
+            da = getattr(a.consensus_diag, f).astype(jnp.float64)
+            db = getattr(b.consensus_diag, f).astype(jnp.float64)
+            derr = float(jnp.max(jnp.abs(da - db)))
+            assert derr < 1e-8, f"{name} diag {f} err {derr}"
 print("OK")
 """
 

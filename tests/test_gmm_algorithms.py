@@ -80,29 +80,41 @@ def test_vbm_average_identity(setup):
     np.testing.assert_allclose(q_avg.beta, q_pool.beta, rtol=1e-6)
 
 
-@pytest.mark.xfail(
-    reason="dVB-ADMM genuinely diverges on the reduced test instances "
-           "(dual wind-up; damped ~1000x by ADMMConsensus(lam_max=...) but "
-           "still ~10x off cVB) — see ROADMAP 'dVB-ADMM numerics'",
-    strict=False)
 def test_paper_claims_ordering(setup):
     """Fig. 4 / Fig. 8 qualitative claims on a reduced instance:
     dVB-ADMM ~ cVB  <<  nsg-dVB; dSVB well below nsg-dVB; noncoop worst;
-    dVB-ADMM faster than dSVB at equal iteration count."""
+    dVB-ADMM faster than dSVB at equal iteration count.
+
+    dVB-ADMM runs the adaptive-penalty consensus subsystem
+    (`adaptive_rho=True`: residual balancing + residual-gated dual warmup
+    + dual reset on eigen-clip) — plain Algorithm 2 genuinely diverges on
+    this reduced instance (dual wind-up; docs/admm-convergence.md)."""
     data, prior, ref_phis, adj, W, init_q = setup
-    kw = dict(n_iters=300, K=K, D=D, ref_phi=ref_phis, init_q=init_q)
-    cvb = algorithms.run_cvb(data.x, data.mask, prior, **kw)
-    dsvb = algorithms.run_dsvb(data.x, data.mask, W, prior, tau=0.2, **kw)
+    kw = dict(K=K, D=D, ref_phi=ref_phis, init_q=init_q)
+    cvb = algorithms.run_cvb(data.x, data.mask, prior, n_iters=300, **kw)
     admm = algorithms.run_dvb_admm(data.x, data.mask, adj, prior, rho=0.5,
-                                   **kw)
-    nsg = algorithms.run_nsg_dvb(data.x, data.mask, W, prior, **kw)
+                                   adaptive_rho=True, n_iters=300, **kw)
+    # dSVB's Robbins-Monro schedule needs more iterations to overtake the
+    # one-shot nsg-dVB plateau on this reduced instance (crossover ~t=430;
+    # the paper's Fig. 4 runs 2000+) — compare those two at 600, and ADMM
+    # against dSVB's 300-iteration mark of the same trajectory.
+    dsvb = algorithms.run_dsvb(data.x, data.mask, W, prior, tau=0.2,
+                               n_iters=600, **kw)
+    nsg = algorithms.run_nsg_dvb(data.x, data.mask, W, prior, n_iters=600,
+                                 **kw)
 
     c = float(cvb.kl_mean[-1])
     assert float(admm.kl_mean[-1]) < c * 1.2 + 1.0          # ADMM ~ cVB
-    assert float(admm.kl_mean[-1]) < float(dsvb.kl_mean[-1])  # ADMM faster
+    assert float(admm.kl_mean[-1]) < 2.0 * c                # within 2x cVB
+    assert float(admm.kl_mean[-1]) < float(dsvb.kl_mean[299])  # ADMM faster
     assert float(dsvb.kl_mean[-1]) < float(nsg.kl_mean[-1])   # dSVB > nsg
     # consensus: ADMM node spread tiny, nsg spread large
     assert float(admm.kl_std[-1]) < 0.05 * float(nsg.kl_std[-1]) + 1e-3
+    # the diagnostics tell the convergence story: the dual warmup gate
+    # opened (and stayed open), and no eigen-clip fired afterwards
+    diag = admm.consensus_diag
+    assert float(diag.dual_on[-1]) == 1.0
+    assert float(diag.kappa[-1]) > 0.9
 
 
 def test_admm_dual_clipping_damps_windup(setup):

@@ -16,22 +16,24 @@ def _x64():
     jax.config.update("jax_enable_x64", False)
 
 
-@pytest.mark.xfail(
-    reason="dVB-ADMM genuinely diverges on the reduced test instances "
-           "(dual wind-up; damped ~1000x by ADMMConsensus(lam_max=...) but "
-           "still ~10x off cVB) — see ROADMAP 'dVB-ADMM numerics'",
-    strict=False)
 def test_end_to_end_distributed_vb_recovers_mixture():
     """Full pipeline: sample sensor data -> run dVB-ADMM -> the recovered
-    mixture means match the ground-truth components (modulo permutation)."""
+    mixture means match the ground-truth components (modulo permutation).
+
+    dVB-ADMM runs the adaptive-penalty consensus subsystem
+    (`adaptive_rho=True`); plain Algorithm 2 diverges on this instance
+    (dual wind-up — docs/admm-convergence.md).  The restart key is 0:
+    PRNGKey(2)'s initialisation sends even centralised VB (the fusion
+    centre this test's consensus target equals) to a degenerate two-
+    component optimum, so it cannot discriminate consensus quality."""
     data = synthetic.paper_synthetic(n_nodes=20, n_per_node=80, seed=7)
     K, D = 3, 2
     prior = expfam.noninformative_prior(K, D, beta0=0.1, w0_scale=10.0)
     adj, _ = network.random_geometric_graph(20, seed=7)
-    init_q = algorithms._perturbed_init(prior, data.x, jax.random.PRNGKey(2))
+    init_q = algorithms._perturbed_init(prior, data.x, jax.random.PRNGKey(0))
     run = algorithms.run_dvb_admm(data.x, data.mask, adj, prior,
                                   n_iters=400, K=K, D=D, rho=0.5,
-                                  init_q=init_q)
+                                  adaptive_rho=True, init_q=init_q)
     q = expfam.unpack_natural(run.phi[0], K, D)
     got = np.asarray(q.m)
     want = synthetic.PAPER_MU

@@ -1,0 +1,85 @@
+"""Docs hygiene checks, run by CI (and locally: `python tools/check_docs.py`).
+
+1. Link check — every RELATIVE markdown link in README.md and docs/*.md
+   must resolve to a file or directory in the tree (http(s) and #anchors
+   are skipped; `path#anchor` checks only the path part).
+2. ISSUE file check — every tree-path-looking backtick reference in
+   ISSUE.md (e.g. `docs/ARCHITECTURE.md`, `benchmarks/consensus_bench.py`)
+   must exist, so the issue's deliverables cannot silently drop out of the
+   tree.
+
+Exits non-zero with a per-problem report on failure.
+"""
+from __future__ import annotations
+
+import os
+import re
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+MD_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+# backtick refs in ISSUE.md that look like tree paths (contain a slash and
+# one of the repo's top-level dirs); `pkg/mod.py::sym` checks the file part
+ISSUE_PATH = re.compile(
+    r"`((?:src|docs|tests|benchmarks|examples|tools|\.github)/[^`\s]+)`")
+
+
+def check_markdown_links(md_path: str) -> list[str]:
+    problems = []
+    base = os.path.dirname(md_path)
+    with open(md_path, encoding="utf-8") as f:
+        text = f.read()
+    for m in MD_LINK.finditer(text):
+        target = m.group(1)
+        if target.startswith(("http://", "https://", "mailto:", "#")):
+            continue
+        path = target.split("#", 1)[0]
+        if not path:
+            continue
+        resolved = os.path.normpath(os.path.join(base, path))
+        if not os.path.exists(resolved):
+            problems.append(f"{os.path.relpath(md_path, ROOT)}: "
+                            f"broken relative link -> {target}")
+    return problems
+
+
+def check_issue_files(issue_path: str) -> list[str]:
+    problems = []
+    with open(issue_path, encoding="utf-8") as f:
+        text = f.read()
+    for m in ISSUE_PATH.finditer(text):
+        ref = m.group(1).split("::", 1)[0].rstrip("/")
+        if not os.path.exists(os.path.join(ROOT, ref)):
+            problems.append(f"ISSUE.md references missing file: {ref}")
+    return problems
+
+
+def main() -> int:
+    targets = [os.path.join(ROOT, "README.md")]
+    docs_dir = os.path.join(ROOT, "docs")
+    if os.path.isdir(docs_dir):
+        targets += [os.path.join(docs_dir, n)
+                    for n in sorted(os.listdir(docs_dir))
+                    if n.endswith(".md")]
+    else:
+        print("FAIL: docs/ directory missing")
+        return 1
+    problems = []
+    for t in targets:
+        problems += check_markdown_links(t)
+    issue = os.path.join(ROOT, "ISSUE.md")
+    if os.path.exists(issue):
+        problems += check_issue_files(issue)
+    if problems:
+        print(f"FAIL: {len(problems)} docs problem(s)")
+        for p in problems:
+            print("  -", p)
+        return 1
+    print(f"OK: {len(targets)} markdown file(s) link-checked, "
+          "ISSUE.md file references all present")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
