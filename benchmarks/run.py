@@ -5,11 +5,13 @@ paper's exact experiment sizes (50 nodes, 2000-3000 iterations; the 300 MC
 trials are NOT replicated — see README "Quickstart" / EXPERIMENTS.md);
 default settings are reduced-but-faithful for the CPU container.
 
-``--json PATH`` additionally emits a machine-readable snapshot
-(``BENCH_engine.json`` in CI): ``{name: {us_per_call, derived}}`` plus a
-``failed`` list, so the perf trajectory is tracked across PRs.  ``--only``
-matches comma-separated prefixes against either the benchmark name or its
-group (``paper_fig`` selects every fig*/table* reproduction).
+``--json PATH`` additionally emits a machine-readable snapshot:
+``{name: {us_per_call, derived}}`` plus a ``failed`` list.  It DEFAULTS to
+``BENCH_engine.json`` at the repo root — that file is committed, so the
+perf trajectory accumulates in-tree across PRs instead of living only in
+CI artifacts (pass ``--json /dev/null`` to opt out).  ``--only`` matches
+comma-separated prefixes against either the benchmark name or its group
+(``paper_fig`` selects every fig*/table* reproduction).
 """
 import argparse
 import json
@@ -30,12 +32,17 @@ def main() -> None:
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default=None,
                     help="comma-separated benchmark-name or group prefixes")
-    ap.add_argument("--json", default=None, metavar="PATH",
-                    help="also write {name: {us_per_call, derived}} JSON")
+    ap.add_argument("--json", metavar="PATH",
+                    default=os.path.join(_ROOT, "BENCH_engine.json"),
+                    help="also write {name: {us_per_call, derived}} JSON "
+                         "(default: BENCH_engine.json at the repo root, "
+                         "which is committed so the perf trajectory "
+                         "accumulates across PRs)")
     args, _ = ap.parse_known_args()
 
     from benchmarks import consensus_bench, gmm_backend_bench, kernel_bench, \
-        linreg_bench, paper_figures, roofline, weights_ablation
+        linreg_bench, minibatch_bench, paper_figures, roofline, \
+        weights_ablation
     # (group, name, fn) — group is an --only alias for a family of benches
     benches = ([("paper_fig", f.__name__, f) for f in paper_figures.ALL]
                + [("weights_ablation", "weights_ablation",
@@ -44,6 +51,7 @@ def main() -> None:
                    linreg_bench.run),
                   ("kernel_bench", "kernel_bench", kernel_bench.run),
                   ("gmm_backend", "gmm_backend", gmm_backend_bench.run),
+                  ("minibatch_vb", "minibatch_vb", minibatch_bench.run),
                   ("consensus_lm", "consensus_lm", consensus_bench.run),
                   ("consensus_vb", "consensus_vb", consensus_bench.vb_run),
                   ("roofline", "roofline", roofline.run)])
@@ -64,9 +72,20 @@ def main() -> None:
             failed.append(bname)
             print(f"{bname},nan,FAILED")
             traceback.print_exc()
-    if args.json:
+    if args.json and args.json != "/dev/null":
+        # merge into an existing snapshot (partial --only runs must not
+        # wipe the committed trajectory's other rows)
+        merged = {}
+        if os.path.exists(args.json):
+            try:
+                with open(args.json) as f:
+                    merged = json.load(f).get("results", {})
+            except (ValueError, OSError) as e:
+                print(f"WARNING: could not parse existing {args.json} "
+                      f"({e}); its rows will be lost", file=sys.stderr)
+        merged.update(results)
         with open(args.json, "w") as f:
-            json.dump({"results": results, "failed": failed}, f, indent=1,
+            json.dump({"results": merged, "failed": failed}, f, indent=1,
                       default=float)
     if failed:
         raise SystemExit(1)

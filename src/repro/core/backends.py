@@ -127,18 +127,18 @@ def _fused_local_vbm(x, mask, phi_nodes, prior, replication, *, K, D,
     if data_dtype is not None:
         x = x.astype(data_dtype)
     mask = mask.astype(x.dtype)
+    # replication scaling happens kernel-side (at statistics-emit time)
     _, R, sum_x, sum_xx = ops.gmm_estep_nodes(x, mask, log_prior, Wn, b, c,
+                                              replication,
                                               block_t=block_t,
                                               return_r=False)
 
-    # fused post-stage: replication scaling + Appendix-A VBM update + pack
-    rep = jnp.asarray(replication, acc)
+    # fused post-stage: Appendix-A VBM update + pack
     prior_acc = jax.tree_util.tree_map(lambda a: a.astype(acc), prior)
 
     def post(R_i, sx_i, sxx_i):
-        stats = gmm.SuffStats(R=rep * R_i.astype(acc),
-                              sum_x=rep * sx_i.astype(acc),
-                              sum_xx=rep * sxx_i.astype(acc))
+        stats = gmm.SuffStats(R=R_i.astype(acc), sum_x=sx_i.astype(acc),
+                              sum_xx=sxx_i.astype(acc))
         return expfam.pack_natural(gmm.posterior_from_stats(stats, prior_acc))
 
     return jax.vmap(post)(R, sum_x, sum_xx).astype(out)

@@ -47,14 +47,27 @@ the COMPUTE implementation of the per-node hot path (model.local_optimum)
 via core/backends.py — "reference" einsums or the "fused" Pallas kernel —
 for models that support it.  Backend x executor parity is asserted in
 tests/test_backends.py.
+
+Streaming: `run_vb(..., minibatch=stream.MinibatchSpec(batch_size, seed))`
+runs the stochastic form of every estimator — per-iteration reshuffled
+minibatches with unbiased n_i/|B| statistics rescaling (data/stream.py),
+which is what makes the Robbins-Monro `Schedule` a genuine stochastic
+natural-gradient step.  Time-varying networks: `Diffusion`,
+`RingDiffusion` and `ADMMConsensus` take `link_drop` / `link_mask_fn`
+(see `_LinkSchedule`) to run over per-iteration failing links, with the
+surviving fraction observable as `ConsensusDiagnostics.link_frac`.
+Both compose with both executors and both backends
+(tests/test_streaming.py).
 """
 from __future__ import annotations
 
-from typing import Any, NamedTuple, Optional
+from typing import Any, Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 
+from repro.core import network as network_lib
+from repro.data import stream
 from repro.dist import compat
 
 
@@ -191,6 +204,71 @@ def residual_balanced_rho(rho, r_norm, s_norm, *, mu: float = 10.0,
 
 
 # ---------------------------------------------------------------------------
+# Time-varying links (failing sensor links, Sec. II's unreliable networks)
+# ---------------------------------------------------------------------------
+class _LinkSchedule:
+    """Per-iteration link-failure schedule shared by the topologies.
+
+    Two forms, mutually exclusive:
+
+    * `link_drop` — every undirected link independently fails with this
+      probability each iteration (Bernoulli, deterministic in
+      (`link_seed`, t) via `network.link_keep_matrix` /
+      `network.ring_link_keep`, so both executors replay the identical
+      failure pattern).
+    * `link_mask_fn(t)` — an explicit keep-mask sequence: a traceable
+      callable returning the iteration-t keep mask ((N, N) 0/1 symmetric
+      for graph topologies, (N,) per ring edge for `RingDiffusion`).  An
+      explicit adjacency sequence whose edges are a subset of the base
+      graph is `lambda t: adj_seq[t]`-style.
+
+    With neither set the topology is static and every code path is
+    bit-identical to the time-invariant engine (golden-parity guarantee).
+    """
+
+    def __init__(self, link_drop: float = 0.0, link_seed: int = 0,
+                 link_mask_fn: Optional[Callable] = None):
+        if link_drop and link_mask_fn is not None:
+            raise ValueError("pass link_drop OR link_mask_fn, not both")
+        if not 0.0 <= link_drop <= 1.0:
+            raise ValueError(f"link_drop must be a probability: {link_drop}")
+        self.link_drop = float(link_drop)
+        self.link_mask_fn = link_mask_fn
+        self.time_varying = bool(link_drop) or link_mask_fn is not None
+        self._link_key = (jax.random.PRNGKey(link_seed)
+                          if self.time_varying and link_mask_fn is None
+                          else None)
+
+    def _require_t(self, t):
+        if t is None:
+            raise ValueError(
+                "time-varying links need the iteration index: call "
+                "combine(..., t=<iteration>) (run_vb supplies it "
+                "automatically)")
+        return t
+
+    def keep_matrix(self, t, n: int, dtype) -> jnp.ndarray:
+        t = self._require_t(t)
+        if self.link_mask_fn is not None:
+            return jnp.asarray(self.link_mask_fn(t)).astype(dtype)
+        return network_lib.link_keep_matrix(self._link_key, t, n,
+                                            self.link_drop, dtype)
+
+    def keep_ring(self, t, n: int, dtype) -> jnp.ndarray:
+        t = self._require_t(t)
+        if self.link_mask_fn is not None:
+            return jnp.asarray(self.link_mask_fn(t)).astype(dtype)
+        return network_lib.ring_link_keep(self._link_key, t, n,
+                                          self.link_drop, dtype)
+
+
+def _local_rows(full: jnp.ndarray, n_local: int, axis: str) -> jnp.ndarray:
+    """This shard's contiguous row block of a replicated (N, ...) array."""
+    row0 = jax.lax.axis_index(axis) * n_local
+    return jax.lax.dynamic_slice_in_dim(full, row0, n_local, axis=0)
+
+
+# ---------------------------------------------------------------------------
 # Topologies / combiners
 # ---------------------------------------------------------------------------
 class _CombineTopology:
@@ -218,7 +296,7 @@ class _CombineTopology:
         from jax.sharding import PartitionSpec as P
         return P(axis)
 
-    def combine(self, varphi, *, axis=None, local=None):
+    def combine(self, varphi, *, axis=None, local=None, t=None):
         raise NotImplementedError
 
     def step(self, model, phi, carry, phi_star, t, schedule: Schedule, *,
@@ -228,7 +306,8 @@ class _CombineTopology:
             varphi = phi_star                       # one-shot: jump to phi*
         else:
             varphi = phi + eta * (phi_star - phi)   # Eq. 27a
-        return self.combine(varphi, axis=axis, local=local), carry, None
+        return (self.combine(varphi, axis=axis, local=local, t=t),
+                carry, None)
 
 
 class FusionCenter(_CombineTopology):
@@ -243,7 +322,7 @@ class FusionCenter(_CombineTopology):
     [[1.0, 3.0], [1.0, 3.0]]
     """
 
-    def combine(self, varphi, *, axis=None, local=None):
+    def combine(self, varphi, *, axis=None, local=None, t=None):
         if axis is None:
             mean = jnp.mean(varphi, axis=0)
         else:
@@ -260,7 +339,7 @@ class Isolated(_CombineTopology):
     True
     """
 
-    def combine(self, varphi, *, axis=None, local=None):
+    def combine(self, varphi, *, axis=None, local=None, t=None):
         return varphi
 
 
@@ -268,26 +347,59 @@ class Diffusion(_CombineTopology):
     """Arbitrary-graph diffusion combine phi_i <- sum_j w_ij varphi_j
     (Eq. 27b) with a row-stochastic weight matrix (e.g. Eq. 47).
 
+    `link_drop` / `link_mask_fn` make the network time-varying: each
+    iteration the surviving off-diagonal entries are renormalised per row
+    (for the Eq. 47 nearest-neighbour weights that IS Eq. 47 evaluated on
+    the surviving graph — uniform over the still-reachable neighbourhood),
+    so the combine stays row-stochastic over whatever links are up.
+
     >>> import jax.numpy as jnp
     >>> W = jnp.asarray([[0.5, 0.5], [0.5, 0.5]])        # 2-node clique
     >>> Diffusion(W).combine(jnp.asarray([[0.0], [4.0]])).tolist()
     [[2.0], [2.0]]
+    >>> dead = Diffusion(W, link_mask_fn=lambda t: jnp.eye(2))  # all down
+    >>> dead.combine(jnp.asarray([[0.0], [4.0]]), t=0).tolist()
+    [[0.0], [4.0]]
     """
 
-    def __init__(self, weights: jnp.ndarray):
+    def __init__(self, weights: jnp.ndarray, *, link_drop: float = 0.0,
+                 link_seed: int = 0,
+                 link_mask_fn: Optional[Callable] = None):
         self.weights = weights
+        self.links = _LinkSchedule(link_drop, link_seed, link_mask_fn)
 
     def shard_inputs(self) -> dict:
         return {"weights": self.weights}
 
-    def combine(self, varphi, *, axis=None, local=None):
+    def _effective_weights(self, W_rows, t, *, axis):
+        """Per-iteration weights: drop-masked, row-renormalised."""
+        n = self.weights.shape[0]
+        keep = self.links.keep_matrix(t, n, W_rows.dtype)
+        # a node never loses itself: force the keep diagonal to 1 so a
+        # zero-diagonal `link_mask_fn` (an adjacency sequence) cannot
+        # delete the self-weight, and an all-links-down row renormalises
+        # to the identity combine instead of zeroing phi_i
+        keep = jnp.maximum(keep, jnp.eye(n, dtype=W_rows.dtype))
+        if axis is not None:
+            keep = _local_rows(keep, W_rows.shape[0], axis)
+        W_eff = W_rows * keep
+        rows = jnp.sum(W_eff, axis=1, keepdims=True)
+        return W_eff / jnp.where(rows > 0, rows, jnp.ones_like(rows))
+
+    def combine(self, varphi, *, axis=None, local=None, t=None):
         if axis is None:
-            return self.weights @ varphi
+            W = self.weights
+            if self.links.time_varying:
+                W = self._effective_weights(W, t, axis=None)
+            return W @ varphi
         # every node must see the messages addressed to it; on a mesh the
         # collective realising that for an arbitrary graph is an all_gather
         # followed by the local rows of W
+        W = local["weights"]
+        if self.links.time_varying:
+            W = self._effective_weights(W, t, axis=axis)
         varphi_all = jax.lax.all_gather(varphi, axis, tiled=True)
-        return local["weights"] @ varphi_all
+        return W @ varphi_all
 
 
 class RingDiffusion(_CombineTopology):
@@ -304,16 +416,52 @@ class RingDiffusion(_CombineTopology):
     [[7.0], [8.0], [9.0]]
     """
 
-    def __init__(self, w_self: float = 1.0 / 3.0):
+    def __init__(self, w_self: float = 1.0 / 3.0, *, link_drop: float = 0.0,
+                 link_seed: int = 0,
+                 link_mask_fn: Optional[Callable] = None):
         self.w_self = w_self
+        self.links = _LinkSchedule(link_drop, link_seed, link_mask_fn)
 
-    def combine(self, varphi, *, axis=None, local=None):
-        if axis is not None:
-            return ring_combine_block(varphi, axis, self.w_self)
+    def _gated(self, varphi, left, right, e_left, e_right):
+        """Weighted combine over the surviving ring links only: dropped
+        neighbours contribute nothing and the nominal weights renormalise
+        over what is still connected (row-stochastic every iteration).
+        A fully isolated node (both links down AND w_self == 0, so the
+        renormaliser vanishes) keeps its own iterate."""
         w_n = (1.0 - self.w_self) / 2.0
-        return (self.w_self * varphi
-                + w_n * (jnp.roll(varphi, 1, axis=0)
-                         + jnp.roll(varphi, -1, axis=0)))
+        num = (self.w_self * varphi
+               + w_n * (e_left[:, None] * left + e_right[:, None] * right))
+        den = self.w_self + w_n * (e_left + e_right)
+        isolated = den <= 0.0
+        safe = jnp.where(isolated, jnp.ones_like(den), den)
+        return jnp.where(isolated[:, None], varphi, num / safe[:, None])
+
+    def combine(self, varphi, *, axis=None, local=None, t=None):
+        if axis is not None:
+            if not self.links.time_varying:
+                return ring_combine_block(varphi, axis, self.w_self)
+            n_local = varphi.shape[0]
+            n = compat.axis_size(axis) * n_local
+            e = self.links.keep_ring(t, n, varphi.dtype)  # e[i]: link i,i+1
+            fwd, bwd = _ring_perms(compat.axis_size(axis))
+            prev_tail = jax.lax.ppermute(varphi[-1:], axis, fwd)
+            next_head = jax.lax.ppermute(varphi[:1], axis, bwd)
+            left = jnp.concatenate([prev_tail, varphi[:-1]], 0)  # phi_{i-1}
+            right = jnp.concatenate([varphi[1:], next_head], 0)  # phi_{i+1}
+            e_left = _local_rows(jnp.roll(e, 1), n_local, axis)
+            e_right = _local_rows(e, n_local, axis)
+            return self._gated(varphi, left, right, e_left, e_right)
+        if not self.links.time_varying:
+            w_n = (1.0 - self.w_self) / 2.0
+            return (self.w_self * varphi
+                    + w_n * (jnp.roll(varphi, 1, axis=0)
+                             + jnp.roll(varphi, -1, axis=0)))
+        n = varphi.shape[0]
+        e = self.links.keep_ring(t, n, varphi.dtype)     # e[i]: link (i,i+1)
+        return self._gated(varphi,
+                           jnp.roll(varphi, 1, axis=0),
+                           jnp.roll(varphi, -1, axis=0),
+                           jnp.roll(e, 1), e)
 
 
 class ConsensusDiagnostics(NamedTuple):
@@ -334,6 +482,10 @@ class ConsensusDiagnostics(NamedTuple):
     reset_count : number of nodes whose duals were reset/decayed this
         iteration (`dual_reset`); 0 when the feature is off.
     dual_on : 1.0 once the dual ascent is active (warmup gate open).
+    link_frac : effective connectivity — the fraction of the nominal
+        graph's (directed) adjacency entries alive this iteration;
+        constant 1.0 on a static network, < 1 while links are down
+        (`link_drop` / `link_mask_fn`).
     """
 
     primal_resid: jnp.ndarray
@@ -343,6 +495,7 @@ class ConsensusDiagnostics(NamedTuple):
     clip_count: jnp.ndarray
     reset_count: jnp.ndarray
     dual_on: jnp.ndarray
+    link_frac: jnp.ndarray
 
 
 class ADMMConsensus:
@@ -420,8 +573,11 @@ class ADMMConsensus:
                  dual_warmup: bool | str = "auto", warmup_tol: float = 1e-3,
                  warmup_window: int = 10,
                  dual_reset: float | None | str = "auto",
-                 clip_tol: float = 1e-9):
+                 clip_tol: float = 1e-9, link_drop: float = 0.0,
+                 link_seed: int = 0,
+                 link_mask_fn: Optional[Callable] = None):
         self.adj = adj
+        self.links = _LinkSchedule(link_drop, link_seed, link_mask_fn)
         self.rho = rho
         self.xi = xi
         self.project = project
@@ -490,7 +646,21 @@ class ADMMConsensus:
     def step(self, model, phi, carry, phi_star, t, schedule: Schedule, *,
              axis=None, local=None):
         adj_rows = self.adj if axis is None else local["adj"]
-        deg = jnp.sum(adj_rows, axis=1)               # |N_i|
+        if self.links.time_varying:
+            # iteration-t adjacency: the consensus constraints (and hence
+            # the 38a neighbour sums, degrees and the 39 disagreement) only
+            # couple nodes whose link is up this iteration
+            keep = self.links.keep_matrix(t, self.adj.shape[0], phi.dtype)
+            if axis is not None:
+                keep = _local_rows(keep, adj_rows.shape[0], axis)
+            adj_rows = adj_rows * keep.astype(adj_rows.dtype)
+            alive = jnp.sum(adj_rows)
+            if axis is not None:
+                alive = jax.lax.psum(alive, axis)
+            link_frac = (alive / jnp.sum(self.adj)).astype(phi.dtype)
+        else:
+            link_frac = jnp.ones((), phi.dtype)
+        deg = jnp.sum(adj_rows, axis=1)               # |N_i(t)|
 
         def neigh_sum(z):                             # sum_{j in N_i} z_j
             if axis is None:
@@ -526,13 +696,14 @@ class ADMMConsensus:
                 kappa=kappa.astype(phi.dtype),
                 clip_count=clip_count,
                 reset_count=jnp.zeros((), jnp.int32),
-                dual_on=jnp.ones((), phi.dtype))
+                dual_on=jnp.ones((), phi.dtype),
+                link_frac=link_frac)
             return phi_new, lam_new, diag
         return self._adaptive_step(model, phi, carry, phi_star, deg,
-                                   neigh_sum, axis=axis)
+                                   neigh_sum, link_frac, axis=axis)
 
-    def _adaptive_step(self, model, phi, carry, phi_star, deg, neigh_sum, *,
-                       axis=None):
+    def _adaptive_step(self, model, phi, carry, phi_star, deg, neigh_sum,
+                       link_frac, *, axis=None):
         lam, rho_vec, stable, t_act, active = carry
         dt = phi.dtype
         if self.per_block:
@@ -605,7 +776,7 @@ class ADMMConsensus:
         diag = ConsensusDiagnostics(
             primal_resid=r_norm, dual_resid=s_norm, rho=rho_vec,
             kappa=kappa, clip_count=clip_count, reset_count=reset_count,
-            dual_on=active.astype(dt))
+            dual_on=active.astype(dt), link_frac=link_frac)
         return phi_new, (lam_new, rho_vec, stable, t_act, active), diag
 
 
@@ -648,12 +819,26 @@ class MeshExecutor(NamedTuple):
 # ---------------------------------------------------------------------------
 def _scan_steps(model, data, topology, schedule, replication, ref_phi,
                 n_iters, phi0, carry0, *, axis=None, local=None,
-                diagnostics=True, metric_nodes=None):
+                diagnostics=True, metric_nodes=None, minibatch=None,
+                stream_keys=None):
     """The per-iteration kernel, shared verbatim by both executors."""
+    base_mask = model.data_mask(data) if minibatch is not None else None
 
     def step(carry, t):
         phi, aux = carry
-        phi_star = model.local_optimum(data, phi, replication)
+        if minibatch is None:
+            data_t = data
+        else:
+            # streaming path: gather this iteration's per-node minibatch;
+            # the scaled mask (capacity/batch on selected points) keeps
+            # the sufficient statistics unbiased, so phi* becomes the
+            # stochastic estimate the Robbins-Monro eta_t (Eq. 22)
+            # assumes and the 27a step is a genuine stochastic
+            # natural-gradient step
+            idx, mb_mask = stream.minibatch_select(
+                stream_keys, base_mask, t, minibatch.batch_size)
+            data_t = model.take_minibatch(data, idx, mb_mask)
+        phi_star = model.local_optimum(data_t, phi, replication)
         phi_new, aux_new, diag = topology.step(model, phi, aux, phi_star, t,
                                                schedule, axis=axis,
                                                local=local)
@@ -682,6 +867,7 @@ def run_vb(model, data, topology, *, n_iters: int,
            ref_phi: Optional[jnp.ndarray] = None,
            executor: Optional[MeshExecutor] = None,
            backend=None,
+           minibatch: Optional[stream.MinibatchSpec] = None,
            diagnostics: bool = True,
            metric_nodes: Optional[int] = None) -> VBRun:
     """Run distributed VB: `model` on `data` over `topology`.
@@ -706,6 +892,15 @@ def run_vb(model, data, topology, *, n_iters: int,
         selection via `with_backend` (GMMModel).  None keeps the model's
         own backend.  Orthogonal to `executor`: the backend picks the
         kernel, the executor picks how the node axis is laid out.
+    minibatch : `stream.MinibatchSpec(batch_size, seed)` switches the run
+        to streaming stochastic VB — each iteration every node estimates
+        phi*_i from a `batch_size` window of its per-epoch reshuffled
+        local data (selected points reweighted by capacity/batch_size so
+        the statistics stay unbiased, composing with `replication`).
+        Deterministic per (seed, node, iteration):
+        both executors and both compute backends see identical batches.
+        `batch_size >= n_per_node` reproduces the full-batch run
+        bit-for-bit.
     diagnostics : also record per-iteration consensus error
     metric_nodes : evaluate the Eq. 46 metric on only the first
         `metric_nodes` rows (kl_nodes becomes (T, metric_nodes)) — used by
@@ -755,11 +950,26 @@ def run_vb(model, data, topology, *, n_iters: int,
                                     (n_nodes, model.flat_dim))
     carry0 = topology.init_carry(init_phi, model)
 
+    stream_keys = None
+    if minibatch is not None:
+        if minibatch.batch_size < 1:
+            raise ValueError(f"batch_size must be >= 1: {minibatch}")
+        if getattr(model, "take_minibatch", None) is None:
+            raise ValueError(
+                f"{type(model).__name__} does not support streaming "
+                "minibatches (no take_minibatch/data_mask methods)")
+        capacity = model.data_mask(data).shape[1]   # also validates shape
+        if minibatch.batch_size > capacity:
+            # covering the whole node = the bit-exact full-batch path
+            minibatch = minibatch._replace(batch_size=int(capacity))
+        stream_keys = stream.node_keys(n_nodes, minibatch.seed)
+
     if executor is None:
         phi, kls, msds, diags = _scan_steps(
             model, data, topology, schedule, replication, ref_phi,
             n_iters, init_phi, carry0, diagnostics=diagnostics,
-            metric_nodes=metric_nodes)
+            metric_nodes=metric_nodes, minibatch=minibatch,
+            stream_keys=stream_keys)
         return VBRun(phi=phi, kl_mean=jnp.mean(kls, 1),
                      kl_std=jnp.std(kls, 1), kl_nodes=kls,
                      consensus_err=msds if diagnostics else None,
@@ -767,12 +977,13 @@ def run_vb(model, data, topology, *, n_iters: int,
 
     return _run_vb_sharded(model, data, topology, schedule, replication,
                            ref_phi, n_iters, init_phi, carry0,
-                           executor, diagnostics)
+                           executor, diagnostics, minibatch, stream_keys)
 
 
 def _run_vb_sharded(model, data, topology, schedule, replication, ref_phi,
                     n_iters, init_phi, carry0, executor: MeshExecutor,
-                    diagnostics: bool) -> VBRun:
+                    diagnostics: bool, minibatch=None,
+                    stream_keys=None) -> VBRun:
     """shard_map executor: node axis sharded over `executor.axis`."""
     mesh, axis = executor.mesh, executor.axis
     from jax.sharding import PartitionSpec
@@ -781,22 +992,26 @@ def _run_vb_sharded(model, data, topology, schedule, replication, ref_phi,
     local_inputs = topology.shard_inputs()          # dict of (N, ...) arrays
     local_keys = tuple(sorted(local_inputs))
     has_carry = carry0 is not None
+    has_stream = stream_keys is not None
     # diagnostics pytrees are reduced with psum/pmean inside the step, so
     # every shard returns the identical (replicated) value
     has_diag = diagnostics and getattr(topology, "emits_diagnostics", False)
 
     in_specs, out_specs = sharding.vb_node_specs(
         data, axis=axis, has_carry=has_carry, n_local=len(local_keys),
-        carry_specs=topology.carry_specs(axis) if has_carry else None)
+        carry_specs=topology.carry_specs(axis) if has_carry else None,
+        has_stream=has_stream)
     if has_diag:
         out_specs = out_specs + (PartitionSpec(),)
 
-    def run(data_l, phi_l, carry_l, *local_vals):
+    def run(data_l, phi_l, carry_l, stream_l, *local_vals):
         local = dict(zip(local_keys, local_vals))
         phi, kls, msds, diags = _scan_steps(
             model, data_l, topology, schedule, replication, ref_phi,
             n_iters, phi_l, carry_l if has_carry else None,
-            axis=axis, local=local, diagnostics=diagnostics)
+            axis=axis, local=local, diagnostics=diagnostics,
+            minibatch=minibatch,
+            stream_keys=stream_l if has_stream else None)
         if has_diag:
             return phi, kls, msds, diags
         return phi, kls, msds
@@ -805,6 +1020,7 @@ def _run_vb_sharded(model, data, topology, schedule, replication, ref_phi,
                           out_specs=out_specs, check_vma=False)
     out = fn(data, init_phi,
              carry0 if has_carry else jnp.zeros((), init_phi.dtype),
+             stream_keys if has_stream else jnp.zeros((), init_phi.dtype),
              *(local_inputs[k] for k in local_keys))
     phi, kls, msds = out[:3]
     diags = out[3] if has_diag else None

@@ -93,6 +93,20 @@ class ConjugateExpModel(Protocol):
         """
         ...
 
+    def data_mask(self, data: Any) -> jnp.ndarray:
+        """(N, T) per-sample validity mask of the stacked node data — the
+        base mask the streaming layer (data/stream.py) subsamples from."""
+        ...
+
+    def take_minibatch(self, data: Any, idx: jnp.ndarray,
+                       mb_mask: jnp.ndarray) -> Any:
+        """Gather the per-iteration minibatch: `idx` (N, B) indexes each
+        node's sample axis, `mb_mask` (N, B) is the pre-scaled minibatch
+        mask from `stream.minibatch_select` (selected-point weight T/B,
+        so statistics stay unbiased).  Returns a data pytree of the same
+        structure with the sample axis shrunk to B."""
+        ...
+
 
 # ---------------------------------------------------------------------------
 # Bayesian GMM (the paper's worked example)
@@ -136,6 +150,14 @@ class GMMModel:
         x, mask = data
         return self.backend.local_vbm_optimum_nodes(
             x, mask, phi_nodes, self.prior, replication, self.K, self.D)
+
+    def data_mask(self, data):
+        _, mask = data
+        return mask
+
+    def take_minibatch(self, data, idx, mb_mask):
+        x, _ = data
+        return jnp.take_along_axis(x, idx[:, :, None], axis=1), mb_mask
 
     def project_to_domain(self, phi: jnp.ndarray) -> jnp.ndarray:
         return expfam.project_to_domain(phi, self.K, self.D)
@@ -215,3 +237,20 @@ class LinRegModel:
 
     def block_labels(self) -> jnp.ndarray:
         return linreg.block_labels(self.D)
+
+    def _raw_data(self, data):
+        if hasattr(data, "ndim") and data.ndim == 2 \
+                and data.shape[-1] == self.flat_dim:
+            raise ValueError(
+                "cannot minibatch a precomputed (N, P) phi* stack; pass "
+                "raw (X, y, mask) node data to stream LinRegModel")
+        return data
+
+    def data_mask(self, data):
+        _, _, mask = self._raw_data(data)
+        return mask
+
+    def take_minibatch(self, data, idx, mb_mask):
+        X, y, _ = self._raw_data(data)
+        return (jnp.take_along_axis(X, idx[:, :, None], axis=1),
+                jnp.take_along_axis(y, idx, axis=1), mb_mask)

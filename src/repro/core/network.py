@@ -8,6 +8,7 @@ algorithms.  The paper's reference topology is a random geometric graph:
 from __future__ import annotations
 
 import numpy as np
+import jax
 import jax.numpy as jnp
 
 
@@ -76,6 +77,32 @@ def metropolis_weights(adj: jnp.ndarray) -> jnp.ndarray:
     off = adj / (1.0 + jnp.maximum(deg[:, None], deg[None, :]))
     diag = 1.0 - jnp.sum(off, axis=1)
     return off + jnp.diag(diag)
+
+
+# ---------------------------------------------------------------------------
+# Time-varying links: per-iteration Bernoulli link failures (jit-side; the
+# keep masks are drawn from a replicated key + the iteration index, so every
+# executor layout sees the identical failure pattern at iteration t)
+# ---------------------------------------------------------------------------
+def link_keep_matrix(key, t, n: int, drop_prob: float,
+                     dtype=jnp.float32) -> jnp.ndarray:
+    """Symmetric (N, N) 0/1 keep mask for iteration t: each *undirected*
+    link (i, j) survives with probability 1 - drop_prob (both directions
+    share one coin — a failed link is failed both ways); the diagonal is
+    always 1 (a node never loses itself).  Deterministic in (key, t)."""
+    kt = jax.random.fold_in(key, t)
+    u = jnp.triu(jax.random.uniform(kt, (n, n)), 1)
+    u = u + u.T                                       # one coin per pair
+    keep = (u >= drop_prob).astype(dtype)
+    return jnp.maximum(keep, jnp.eye(n, dtype=dtype))
+
+
+def ring_link_keep(key, t, n: int, drop_prob: float,
+                   dtype=jnp.float32) -> jnp.ndarray:
+    """(N,) keep mask of the ring edges for iteration t: entry i gates the
+    undirected link (i, i+1 mod N).  Deterministic in (key, t)."""
+    kt = jax.random.fold_in(key, t)
+    return (jax.random.uniform(kt, (n,)) >= drop_prob).astype(dtype)
 
 
 def algebraic_connectivity(adj: jnp.ndarray) -> float:

@@ -80,7 +80,7 @@ def param_shardings(tree, mesh: Mesh, *, fsdp: bool = False,
 
 
 def vb_node_specs(data, *, axis: str, has_carry: bool, n_local: int,
-                  carry_specs=None):
+                  carry_specs=None, has_stream: bool = False):
     """(in_specs, out_specs) for the VB engine's shard_map executor
     (core/engine._run_vb_sharded): every per-node array — the data pytree's
     leaves, the phi iterate, the topology carry (ADMM duals) and the
@@ -94,6 +94,10 @@ def vb_node_specs(data, *, axis: str, has_carry: bool, n_local: int,
     warmup-gate state, which every shard holds identically — see
     `ADMMConsensus.carry_specs`).
 
+    `has_stream` marks the streaming-minibatch key slot (the (N, 2)
+    per-node PRNG keys of data/stream.py) as node-sharded; without it the
+    slot carries a replicated dummy scalar.
+
     One home for the engine's partitioning rule so the compute backends
     (core/backends.py) and the executors agree on what "node-sharded"
     means: a backend always receives the LOCAL slice of the node axis and
@@ -105,7 +109,9 @@ def vb_node_specs(data, *, axis: str, has_carry: bool, n_local: int,
         carry_spec = carry_specs if carry_specs is not None else node
     else:
         carry_spec = P()
-    in_specs = (data_specs, node, carry_spec) + (node,) * n_local
+    stream_spec = node if has_stream else P()
+    in_specs = (data_specs, node, carry_spec, stream_spec) \
+        + (node,) * n_local
     out_specs = (node, P(None, axis), P(None))
     return in_specs, out_specs
 

@@ -38,12 +38,19 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
-def _kernel_nodes(x_ref, mask_ref, lp_ref, wn_ref, b_ref, c_ref,
+def _kernel_nodes(x_ref, mask_ref, lp_ref, wn_ref, b_ref, c_ref, rep_ref,
                   *out_refs, K: int, D: int, return_r: bool):
     """One (node, data-block) grid cell.  Every ref carries a leading
     node-block axis of 1; the accumulator is reset at the start of each
-    node's (sequential, minor) data-block sweep and emitted at its end.
-    out_refs = (r_ref, stats_ref, acc_ref) or (stats_ref, acc_ref)."""
+    node's (sequential, minor) data-block sweep and emitted — scaled by
+    the replication factor (Appendix A) — at its end.
+    out_refs = (r_ref, stats_ref, acc_ref) or (stats_ref, acc_ref).
+
+    The per-component work runs as ROLLED `fori_loop`s over K (dynamic ref
+    slices feed each (Tb, D) @ (D, D) MXU matmul): the trace/compile cost
+    is O(1) in K, where the original unrolled per-component matmuls made
+    compile time blow up past K ~ 16 (ROADMAP item; regression-tested by
+    jaxpr size in tests/test_kernels.py)."""
     if return_r:
         r_ref, stats_ref, acc_ref = out_refs
     else:
@@ -60,15 +67,18 @@ def _kernel_nodes(x_ref, mask_ref, lp_ref, wn_ref, b_ref, c_ref,
     lp = lp_ref[...].reshape(1, K).astype(jnp.float32)
     bmat = b_ref[0].astype(jnp.float32)                  # (K, D)
     cvec = c_ref[...].reshape(1, K).astype(jnp.float32)
+    Tb = x.shape[0]
 
-    # quadratic forms, one MXU matmul per component (K is small, static)
-    quads = []
-    for k in range(K):
-        Wk = wn_ref[0, k].astype(jnp.float32)            # (D, D)
+    # quadratic forms: one MXU matmul per component, rolled over K
+    def quad_body(k, quad):
+        Wk = wn_ref[0, pl.ds(k, 1)][0].astype(jnp.float32)   # (D, D)
         xW = jax.lax.dot_general(x, Wk, (((1,), (0,)), ((), ())),
                                  preferred_element_type=jnp.float32)
-        quads.append(jnp.sum(xW * x, axis=1, keepdims=True))
-    quad = jnp.concatenate(quads, axis=1)                # (Tb, K)
+        qk = jnp.sum(xW * x, axis=1, keepdims=True)          # (Tb, 1)
+        return jax.lax.dynamic_update_slice_in_dim(quad, qk, k, axis=1)
+
+    quad = jax.lax.fori_loop(0, K, quad_body,
+                             jnp.zeros((Tb, K), jnp.float32))
     cross = jax.lax.dot_general(x, bmat, (((1,), (1,)), ((), ())),
                                 preferred_element_type=jnp.float32)
     log_rho = lp - 0.5 * (quad - 2.0 * cross + cvec)
@@ -85,30 +95,42 @@ def _kernel_nodes(x_ref, mask_ref, lp_ref, wn_ref, b_ref, c_ref,
     sum_x = jax.lax.dot_general(r, x, (((0,), (0,)), ((), ())),
                                 preferred_element_type=jnp.float32)  # (K, D)
     acc_ref[0:K, :] += sum_x
-    for k in range(K):
-        rx = x * r[:, k:k + 1]
-        xx = jax.lax.dot_general(rx, x, (((0,), (0,)), ((), ())),
+
+    def xx_body(k, xx_all):
+        rk = jax.lax.dynamic_slice_in_dim(r, k, 1, axis=1)   # (Tb, 1)
+        xx = jax.lax.dot_general(x * rk, x, (((0,), (0,)), ((), ())),
                                  preferred_element_type=jnp.float32)
-        acc_ref[K + k * D:K + (k + 1) * D, :] += xx
+        return jax.lax.dynamic_update_slice_in_dim(xx_all, xx, k * D, 0)
+
+    xx_all = jax.lax.fori_loop(0, K, xx_body,
+                               jnp.zeros((K * D, D), jnp.float32))
+    acc_ref[K:K + K * D, :] += xx_all
     Rk = jnp.sum(r, axis=0)                              # (K,)
     acc_ref[K + K * D:K + K * D + K, 0:1] += Rk[:, None]
 
     @pl.when(ti == nt - 1)
     def _emit():
-        stats_ref[0] = acc_ref[...]
+        # replication scaling lives kernel-side: the emitted statistics are
+        # already the Appendix-A replicated R / sum_x / sum_xx
+        stats_ref[0] = acc_ref[...] * rep_ref[0]
 
 
 def gmm_estep_nodes(x, mask, log_prior, Wn, b, c, *, block_t: int = 512,
-                    interpret: bool = True, return_r: bool = True):
+                    interpret: bool = True, return_r: bool = True,
+                    replication=1.0):
     """Whole-network fused VBE step: x (N, T, D), mask (N, T), per-node
     per-component terms log_prior (N, K), Wn (N, K, D, D), b (N, K, D),
     c (N, K).  Returns (r (N, T, K), R (N, K), sum_x (N, K, D),
-    sum_xx (N, K, D, D)) — unreplicated stats, node i matching
-    ref.gmm_estep(x[i], ...).  With `return_r=False` (the engine hot path,
-    which only needs the statistics) r is None and never written to HBM.
-    Grid is (node, data-block) with the data axis minor, so each node's
-    statistics accumulate sequentially in one VMEM scratch and are written
-    out once."""
+    sum_xx (N, K, D, D)) — `replication`-scaled stats (default 1.0 =
+    unreplicated, node i matching ref.gmm_estep(x[i], ...)); the engine
+    hot path passes the Appendix-A network-size factor so the scaling
+    happens kernel-side at statistics-emit time instead of as a separate
+    post-pass.  `replication` may be a traced scalar.  With
+    `return_r=False` (the engine hot path, which only needs the
+    statistics) r is None and never written to HBM.  Grid is
+    (node, data-block) with the data axis minor, so each node's statistics
+    accumulate sequentially in one VMEM scratch and are written out
+    once."""
     N, T, D = x.shape
     K = log_prior.shape[-1]
     bt = min(block_t, max(8, T))
@@ -116,6 +138,7 @@ def gmm_estep_nodes(x, mask, log_prior, Wn, b, c, *, block_t: int = 512,
     if Tp != T:
         x = jnp.pad(x, ((0, 0), (0, Tp - T), (0, 0)))
         mask = jnp.pad(mask, ((0, 0), (0, Tp - T)))
+    rep = jnp.asarray(replication, jnp.float32).reshape(1)
     rows = K + K * D + K
     out_specs = [pl.BlockSpec((1, rows, D), lambda n, t: (n, 0, 0))]
     out_shape = [jax.ShapeDtypeStruct((N, rows, D), jnp.float32)]
@@ -132,12 +155,13 @@ def gmm_estep_nodes(x, mask, log_prior, Wn, b, c, *, block_t: int = 512,
             pl.BlockSpec((1, K, D, D), lambda n, t: (n, 0, 0, 0)),
             pl.BlockSpec((1, K, D), lambda n, t: (n, 0, 0)),
             pl.BlockSpec((1, K), lambda n, t: (n, 0)),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
         ],
         out_specs=out_specs,
         out_shape=out_shape,
         scratch_shapes=[pltpu.VMEM((rows, D), jnp.float32)],
         interpret=interpret,
-    )(x, mask[..., None], log_prior, Wn, b, c)
+    )(x, mask[..., None], log_prior, Wn, b, c, rep)
     stats = out[-1]
     r = out[0][:, :T] if return_r else None
     sum_x = stats[:, 0:K, :]

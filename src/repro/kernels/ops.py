@@ -53,14 +53,16 @@ def gmm_estep(x, mask, log_prior, Wn, b, c, *, block_t: int = 512):
 
 
 @functools.partial(jax.jit, static_argnames=("block_t", "return_r"))
-def gmm_estep_nodes(x, mask, log_prior, Wn, b, c, *, block_t: int = 512,
-                    return_r: bool = True):
+def gmm_estep_nodes(x, mask, log_prior, Wn, b, c, replication=1.0, *,
+                    block_t: int = 512, return_r: bool = True):
     """Node-batched fused VBE step: x (N, T, D) and per-node terms; see
     gmm_estep.gmm_estep_nodes.  The engine hot path (core/backends.py)
-    passes return_r=False — only the statistics leave the kernel."""
+    passes return_r=False — only the statistics leave the kernel — and the
+    Appendix-A `replication` factor, applied to the statistics
+    kernel-side at emit time (traced, not static)."""
     return _ge.gmm_estep_nodes(x, mask, log_prior, Wn, b, c, block_t=block_t,
                                interpret=_default_interpret(),
-                               return_r=return_r)
+                               return_r=return_r, replication=replication)
 
 
 @functools.partial(jax.jit, static_argnames=("block_t", "compute_dtype"))

@@ -33,6 +33,9 @@ class TrainState(NamedTuple):
     opt: adamw.AdamState
     duals: Optional[dict]     # ADMM only
     step: jnp.ndarray
+    rho: Optional[jnp.ndarray] = None   # ADMM penalty as DYNAMIC state
+    # (residual-balanced across steps when TrainHyper.adaptive_rho; None
+    #  for non-ADMM modes)
 
 
 class TrainHyper(NamedTuple):
@@ -43,8 +46,13 @@ class TrainHyper(NamedTuple):
     clip_norm: float = 1.0
     # consensus knobs (paper defaults)
     w_self: float = 1.0 / 3.0   # Eq. 47 nearest-neighbour on a ring
-    rho: float = 0.5            # ADMM penalty (Remark 3)
+    rho: float = 0.5            # ADMM penalty (Remark 3); initial value —
+    #                             the live value is TrainState.rho
     xi: float = 0.05            # kappa ramp (Eq. 40)
+    # residual balancing of rho across training steps (Boyd Sec. 3.4.1,
+    # the VB engine's rule via optim.consensus.adapt_rho)
+    adaptive_rho: bool = False
+    rho_mu: float = 10.0        # grow when ||r|| > mu ||s||, shrink flipped
 
 
 def loss_fn(cfg: ModelConfig, params, batch, *, use_kernels: bool = False):
@@ -67,7 +75,13 @@ def loss_fn(cfg: ModelConfig, params, batch, *, use_kernels: bool = False):
 
 
 def init_state(cfg: ModelConfig, key, *, dp_mode: str = "allreduce",
-               n_replicas: int = 1) -> TrainState:
+               n_replicas: int = 1,
+               hyper: "TrainHyper" = None) -> TrainState:
+    """Pass the SAME `hyper` here and to `make_train_step`: the dynamic
+    ADMM penalty `TrainState.rho` is seeded from `hyper.rho` (the live
+    value is the state, not the hyper — residual balancing moves it when
+    `hyper.adaptive_rho`)."""
+    hyper = hyper if hyper is not None else TrainHyper()
     params = model_lib.init_params(cfg, key)
     if dp_mode != "allreduce":
         params = jax.tree.map(
@@ -75,8 +89,10 @@ def init_state(cfg: ModelConfig, key, *, dp_mode: str = "allreduce",
             params)
     opt = adamw.init(params)
     duals = consensus.admm_init_duals(params) if dp_mode == "admm" else None
+    rho_state = (jnp.asarray(hyper.rho, jnp.float32) if dp_mode == "admm"
+                 else None)
     return TrainState(params=params, opt=opt, duals=duals,
-                      step=jnp.zeros((), jnp.int32))
+                      step=jnp.zeros((), jnp.int32), rho=rho_state)
 
 
 # ---------------------------------------------------------------------------
@@ -109,6 +125,7 @@ def state_shardings(state_like, cfg: ModelConfig, mesh: Mesh, *,
         duals=(spec_params(state_like.duals)
                if state_like.duals is not None else None),
         step=rep0,
+        rho=rep0 if state_like.rho is not None else None,
     )
 
 
@@ -158,7 +175,9 @@ def _allreduce_step(cfg, hyper, use_kernels):
 
 def _consensus_step(cfg, mesh: Mesh, dp_mode: str, axis: str, hyper,
                     use_kernels):
-    def inner(params, opt, duals, step, batch):
+    is_admm = dp_mode == "admm"
+
+    def inner(params, opt, duals, step, rho, batch):
         # strip the per-replica leading axis (size 1 in this shard)
         params_l = jax.tree.map(lambda p: p[0], params)
         opt_l = adamw.AdamState(mu=jax.tree.map(lambda p: p[0], opt.mu),
@@ -170,29 +189,38 @@ def _consensus_step(cfg, mesh: Mesh, dp_mode: str, axis: str, hyper,
         if dp_mode == "diffusion":
             p_new = consensus.diffusion_combine(p_star, axis, hyper.w_self)
             d_new = None
+            rho_new = rho
             r_norm = s_norm = jnp.zeros((), jnp.float32)
         else:
             kap = schedules.kappa(step.astype(jnp.float32) + 1.0, hyper.xi)
             duals_l = jax.tree.map(lambda p: p[0], duals)
             # residual norms ride along on the dual update's own ring
             # exchange — the same primal/dual residuals the VB engine
-            # records in ConsensusDiagnostics (feed to consensus.adapt_rho
-            # to residual-balance hyper.rho)
+            # records in ConsensusDiagnostics; with `adaptive_rho` they
+            # residual-balance the DYNAMIC TrainState.rho between steps
+            # (the engine's Boyd Sec. 3.4.1 rule via consensus.adapt_rho)
             p_new, d_new, (r_norm, s_norm) = consensus.admm_step(
-                p_star, params_l, duals_l, axis, rho=hyper.rho, kappa=kap,
+                p_star, params_l, duals_l, axis, rho=rho, kappa=kap,
                 return_residuals=True)
             d_new = jax.tree.map(lambda p: p[None], d_new)
+            if hyper.adaptive_rho:
+                rho_new = consensus.adapt_rho(rho, r_norm, s_norm,
+                                              mu=hyper.rho_mu)
+            else:
+                rho_new = rho
         metrics = {k: jax.lax.pmean(v, axis) for k, v in metrics.items()}
         metrics["consensus_residual"] = consensus.consensus_residual(
             p_new, axis)
         metrics["admm_primal_resid"] = r_norm
         metrics["admm_dual_resid"] = s_norm
+        metrics["admm_rho"] = (rho_new if is_admm
+                               else jnp.zeros((), jnp.float32))
         p_new = jax.tree.map(lambda p: p[None], p_new)
         new_opt = adamw.AdamState(
             mu=jax.tree.map(lambda p: p[None], new_opt.mu),
             nu=jax.tree.map(lambda p: p[None], new_opt.nu),
             count=new_opt.count)
-        return p_new, new_opt, d_new, metrics
+        return p_new, new_opt, d_new, rho_new, metrics
 
     def step_fn(state: TrainState, batch):
         lead = P(axis)
@@ -201,6 +229,8 @@ def _consensus_step(cfg, mesh: Mesh, dp_mode: str, axis: str, hyper,
         def leaf_specs(tree, spec):
             return jax.tree.map(lambda _: spec, tree)
 
+        rho_in = (state.rho if state.rho is not None
+                  else jnp.zeros((), jnp.float32))
         in_specs = (
             leaf_specs(state.params, lead),
             adamw.AdamState(mu=leaf_specs(state.opt.mu, lead),
@@ -208,13 +238,15 @@ def _consensus_step(cfg, mesh: Mesh, dp_mode: str, axis: str, hyper,
             (leaf_specs(state.duals, lead)
              if state.duals is not None else None),
             rep,
+            rep,
             leaf_specs(batch, lead),
         )
-        out_specs = (in_specs[0], in_specs[1], in_specs[2],
+        out_specs = (in_specs[0], in_specs[1], in_specs[2], rep,
                      leaf_specs({"loss": 0, "ce": 0, "grad_norm": 0, "lr": 0,
                                  "consensus_residual": 0,
                                  "admm_primal_resid": 0,
-                                 "admm_dual_resid": 0}, rep))
+                                 "admm_dual_resid": 0,
+                                 "admm_rho": 0}, rep))
         # Partial-manual (auto "model" axis) where supported; otherwise run
         # fully manual — params replicate over "model" inside the body,
         # which is numerically identical (redundant compute per model
@@ -223,8 +255,10 @@ def _consensus_step(cfg, mesh: Mesh, dp_mode: str, axis: str, hyper,
         fn = compat.shard_map(inner, mesh=mesh, axis_names=names,
                               in_specs=in_specs, out_specs=out_specs,
                               check_vma=False)
-        p, o, d, metrics = fn(state.params, state.opt, state.duals,
-                              state.step, batch)
-        return TrainState(p, o, d, state.step + 1), metrics
+        p, o, d, rho_new, metrics = fn(state.params, state.opt, state.duals,
+                                       state.step, rho_in, batch)
+        return TrainState(p, o, d, state.step + 1,
+                          rho_new if state.rho is not None else None), \
+            metrics
 
     return step_fn

@@ -26,7 +26,8 @@ class Trainer:
         n_rep = (dict(zip(mesh.axis_names, mesh.devices.shape))
                  .get(consensus_axis, 1)) if consensus_axis else 1
         key = jax.random.PRNGKey(seed)
-        state = ts.init_state(cfg, key, dp_mode=dp_mode, n_replicas=n_rep)
+        state = ts.init_state(cfg, key, dp_mode=dp_mode, n_replicas=n_rep,
+                              hyper=hyper)
         self.shardings = ts.state_shardings(state, cfg, mesh, dp_mode=dp_mode,
                                             consensus_axis=consensus_axis)
         self.state = jax.device_put(state, self.shardings)

@@ -139,6 +139,66 @@ def test_train_modes_on_mesh(subproc):
     assert "OK" in out
 
 
+CODE_ADAPTIVE_RHO = r"""
+import jax, jax.numpy as jnp
+from repro.configs.base import ModelConfig
+from repro.dist import compat
+from repro.training import train_step as ts
+
+cfg = ModelConfig(name="tiny", arch_type="dense", n_layers=2, d_model=64,
+                  n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=128,
+                  param_dtype="float32", compute_dtype="float32")
+mesh = jax.make_mesh((4,), ("data",))
+key = jax.random.PRNGKey(0)
+batch = {"tokens": jax.random.randint(key, (8, 32), 0, 128)}
+# rho_mu < 1 makes the balancing rule fire on ANY nonzero residual
+# imbalance, so the adaptation is observable within a few steps
+hyper = ts.TrainHyper(adaptive_rho=True, rho_mu=0.5, rho=0.5)
+with compat.use_mesh(mesh):
+    state = ts.init_state(cfg, key, dp_mode="admm", n_replicas=4,
+                          hyper=hyper)
+    assert state.rho is not None and float(state.rho) == 0.5
+    shd = ts.state_shardings(state, cfg, mesh, dp_mode="admm",
+                             consensus_axis="data")
+    state = jax.device_put(state, shd)
+    b = jax.device_put(batch, ts.batch_sharding(mesh))
+    fn = jax.jit(ts.make_train_step(cfg, mesh, dp_mode="admm",
+                                    consensus_axis="data", hyper=hyper))
+    rhos = [float(state.rho)]
+    for _ in range(4):
+        state, m = fn(state, b)
+        rhos.append(float(state.rho))
+        assert float(m["admm_rho"]) == rhos[-1]
+# rho is DYNAMIC state: the balancing rule moved it across steps
+assert any(r != rhos[0] for r in rhos[1:]), rhos
+
+# without adaptive_rho the dynamic rho must stay put
+with compat.use_mesh(mesh):
+    hyper2 = ts.TrainHyper(rho=0.7)
+    state = ts.init_state(cfg, key, dp_mode="admm", n_replicas=4,
+                          hyper=hyper2)
+    shd = ts.state_shardings(state, cfg, mesh, dp_mode="admm",
+                             consensus_axis="data")
+    state = jax.device_put(state, shd)
+    b = jax.device_put(batch, ts.batch_sharding(mesh))
+    fn = jax.jit(ts.make_train_step(cfg, mesh, dp_mode="admm",
+                                    consensus_axis="data", hyper=hyper2))
+    rho0 = float(state.rho)
+    for _ in range(3):
+        state, m = fn(state, b)
+    assert float(state.rho) == rho0, (float(state.rho), rho0)
+# non-ADMM modes carry no rho state
+state = ts.init_state(cfg, key, dp_mode="diffusion", n_replicas=4)
+assert state.rho is None
+print("OK", rhos)
+"""
+
+
+def test_admm_adaptive_rho_is_dynamic_state(subproc):
+    out = subproc(CODE_ADAPTIVE_RHO, n_devices=4)
+    assert "OK" in out
+
+
 CODE_SHARDING_RULES = r"""
 import jax, jax.numpy as jnp
 from jax.sharding import PartitionSpec as P

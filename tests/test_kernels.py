@@ -133,3 +133,71 @@ def test_gmm_estep_matches_core_vbe():
     np.testing.assert_allclose(r, r2, atol=3e-5)
     np.testing.assert_allclose(R, st.R, rtol=1e-4)
     np.testing.assert_allclose(sxx, st.sum_xx, rtol=1e-3, atol=1e-3)
+
+
+def _gmm_node_args(N, T, K, D, seed=0):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(N, T, D)) * 2, jnp.float32)
+    mask = jnp.asarray(rng.random((N, T)) > 0.2, jnp.float32)
+    lp = jnp.asarray(rng.normal(size=(N, K)), jnp.float32)
+    A = rng.normal(size=(N, K, D, D)) * 0.3
+    Wn = jnp.asarray(np.einsum("nkij,nklj->nkil", A, A) + np.eye(D),
+                     jnp.float32)
+    b = jnp.asarray(rng.normal(size=(N, K, D)), jnp.float32)
+    c = jnp.asarray(rng.uniform(1, 3, (N, K)), jnp.float32)
+    return x, mask, lp, Wn, b, c
+
+
+def test_gmm_estep_nodes_large_k_parity():
+    """K=32 (the ROADMAP large-K case): the rolled-loop kernel must match
+    the oracle just like the small-K sweeps."""
+    args = _gmm_node_args(N=3, T=96, K=32, D=3)
+    r, R, sx, sxx = ops.gmm_estep_nodes(*args, block_t=32)
+    rr, RR, sxr, sxxr = ref.gmm_estep_nodes(*args)
+    np.testing.assert_allclose(r, rr, atol=3e-5)
+    np.testing.assert_allclose(R, RR, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(sx, sxr, rtol=1e-4, atol=5e-4)
+    np.testing.assert_allclose(sxx, sxxr, rtol=1e-3, atol=5e-3)
+
+
+def test_gmm_estep_kernel_replication_scaling():
+    """Kernel-side replication: stats scale by the factor, r does not."""
+    args = _gmm_node_args(N=2, T=50, K=3, D=2)
+    from repro.kernels import gmm_estep as ge
+    r1, R1, sx1, sxx1 = ge.gmm_estep_nodes(*args, replication=1.0)
+    r8, R8, sx8, sxx8 = ge.gmm_estep_nodes(*args, replication=8.0)
+    np.testing.assert_array_equal(np.asarray(r1), np.asarray(r8))
+    np.testing.assert_allclose(np.asarray(R8), 8.0 * np.asarray(R1),
+                               rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(sxx8), 8.0 * np.asarray(sxx1),
+                               rtol=1e-6)
+
+
+def _count_eqns(jaxpr) -> int:
+    n = 0
+    for eqn in jaxpr.eqns:
+        n += 1
+        for v in eqn.params.values():
+            if hasattr(v, "jaxpr"):          # ClosedJaxpr
+                n += _count_eqns(v.jaxpr)
+            elif hasattr(v, "eqns"):         # Jaxpr
+                n += _count_eqns(v)
+    return n
+
+
+def test_gmm_estep_trace_size_constant_in_k():
+    """Compile-time regression (ROADMAP: unrolled per-component matmuls
+    blew up compile time past K~16): the kernel's program must be the SAME
+    SIZE at K=32 as at K=4 — the per-component work is a rolled fori_loop,
+    so trace/lowering cost is O(1) in K."""
+    from repro.kernels import gmm_estep as ge
+
+    def size_at(K):
+        args = _gmm_node_args(N=2, T=64, K=K, D=3)
+        jaxpr = jax.make_jaxpr(
+            lambda *a: ge.gmm_estep_nodes(*a, block_t=32, interpret=True,
+                                          return_r=False))(*args)
+        return _count_eqns(jaxpr.jaxpr)
+
+    small, large = size_at(4), size_at(32)
+    assert large == small, (small, large)
