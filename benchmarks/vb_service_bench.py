@@ -1,0 +1,77 @@
+"""VBService fleet-batching throughput vs sequential `run_vb` calls.
+
+The serving claim: admitting 16 same-shape sensor-network sessions into
+one vmapped fleet and stepping them in slices beats 16 back-to-back
+`run_vb` calls — the fleet pays ONE trace/compile and runs vectorised,
+while sequential serving pays per-session dispatch.  The bench row
+asserts fleet-batched >= 2x sequential wall-clock (the acceptance
+criterion) and reports sessions/sec + fleet steps/sec.
+"""
+import time
+
+import jax
+
+from benchmarks import common
+
+
+def run(full: bool = False):
+    from repro.core import engine, expfam, network
+    from repro.core import model as model_lib
+    from repro.data import synthetic
+    from repro.serving.vb_service import VBRequest, VBService
+
+    expfam.enable_x64()
+    K, D = 3, 2
+    n_sessions = 16
+    n_nodes = 16 if full else 8
+    n_per_node = 50 if full else 25
+    n_iters = 200 if full else 120
+
+    prior = expfam.noninformative_prior(K, D, beta0=0.1, w0_scale=10.0)
+    adj, _ = network.random_geometric_graph(n_nodes, seed=0)
+    W = network.nearest_neighbor_weights(adj)
+    mdl = model_lib.GMMModel(prior, K, D)
+    topo = engine.Diffusion(W)
+    datasets = [synthetic.paper_synthetic(n_nodes=n_nodes,
+                                          n_per_node=n_per_node, seed=s)
+                for s in range(n_sessions)]
+
+    # sequential serving: one run_vb call per session, back to back
+    t0 = time.time()
+    seq_phis = []
+    for d in datasets:
+        r = engine.run_vb(mdl, (d.x, d.mask), topo, n_iters=n_iters,
+                          diagnostics=False)
+        seq_phis.append(jax.block_until_ready(r.phi))
+    t_seq = time.time() - t0
+
+    # fleet serving: one VBService batch, sliced
+    t0 = time.time()
+    svc = VBService(slice_iters=40)
+    rids = [svc.submit(VBRequest(model=mdl, data=(d.x, d.mask),
+                                 topology=topo, n_iters=n_iters))
+            for d in datasets]
+    out = svc.run()
+    jax.block_until_ready([out[r].phi for r in rids])
+    t_fleet = time.time() - t0
+
+    # fidelity guard: the fleet must be serving the same answers
+    import numpy as np
+    for d_phi, rid in zip(seq_phis, rids):
+        err = float(np.max(np.abs(np.asarray(d_phi)
+                                  - np.asarray(out[rid].phi))))
+        assert err < 1e-8, f"fleet diverged from sequential: {err}"
+
+    speedup = t_seq / t_fleet
+    sessions_per_s = n_sessions / t_fleet
+    steps_per_s = n_sessions * n_iters / t_fleet
+    derived = (f"speedup_vs_sequential={speedup:.1f}x "
+               f"sessions_per_s={sessions_per_s:.2f} "
+               f"fleet_steps_per_s={steps_per_s:.0f} "
+               f"n_sessions={n_sessions} n_iters={n_iters}")
+    assert speedup >= 2.0, (
+        f"fleet-batched serving must be >= 2x sequential run_vb "
+        f"(got {speedup:.2f}x: fleet {t_fleet:.2f}s vs "
+        f"sequential {t_seq:.2f}s)")
+    yield ("vb_service_throughput",
+           common.us_per_iter(t_fleet, n_iters * n_sessions), derived)

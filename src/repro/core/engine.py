@@ -58,6 +58,18 @@ natural-gradient step.  Time-varying networks: `Diffusion`,
 surviving fraction observable as `ConsensusDiagnostics.link_frac`.
 Both compose with both executors and both backends
 (tests/test_streaming.py).
+
+Sessions: the engine is organised around an explicit, checkpointable
+state object — `vb_init(model, data, topology, ...)` returns a `VBState`
+pytree (phi, absolute iteration t, topology carry incl. ADMM duals/rho,
+minibatch-sampler stream state, last diagnostics), `vb_step(state)`
+advances one iteration and `vb_run(state, n_iters)` scans it.  All
+per-iteration randomness is keyed on the absolute t carried in the state,
+so runs split across calls (or checkpoint save/restore via
+`checkpoint/ckpt.py`) are bit-exact with the unsplit run; `run_vb` is the
+thin one-shot wrapper.  The serving layer (`serving/vb_service.py`)
+batches many independent sessions along a leading fleet axis over
+`session_step_fn`.
 """
 from __future__ import annotations
 
@@ -288,6 +300,11 @@ class _CombineTopology:
         return {}
 
     def init_carry(self, phi0: jnp.ndarray, model=None):
+        return None
+
+    def init_diag(self, model, phi0: jnp.ndarray):
+        """Structure-stable t=0 value of the per-iteration diagnostics
+        record (None for combine topologies: they emit none)."""
         return None
 
     def carry_specs(self, axis: str):
@@ -611,13 +628,8 @@ class ADMMConsensus:
         lam0 = jnp.zeros_like(phi0)                   # duals lambda_i
         if self._plain:
             return lam0
+        rho0 = self._rho0(model, phi0.dtype)
         dt = phi0.dtype
-        if self.per_block:
-            import numpy as np
-            n_blocks = int(np.max(model.block_labels())) + 1
-            rho0 = jnp.full((n_blocks,), self.rho, dt)
-        else:
-            rho0 = jnp.asarray(self.rho, dt)
         # (duals, rho, consecutive-stable count, iters since dual
         #  activation, gate-open flag)
         return (lam0, rho0, jnp.asarray(0, jnp.int32), jnp.asarray(0.0, dt),
@@ -628,6 +640,29 @@ class ADMMConsensus:
         if self._plain:
             return P(axis)
         return (P(axis), P(), P(), P(), P())
+
+    def _rho0(self, model, dt):
+        if self.per_block:
+            import numpy as np
+            n_blocks = int(np.max(model.block_labels())) + 1
+            return jnp.full((n_blocks,), self.rho, dt)
+        return jnp.asarray(self.rho, dt)
+
+    def init_diag(self, model, phi0: jnp.ndarray):
+        """Zeroed `ConsensusDiagnostics` with the shapes `step` emits, so
+        `VBState.diag` has a stable pytree structure from t=0 on."""
+        dt = phi0.dtype
+        rho0 = self._rho0(model, dt)
+        resid_shape = rho0.shape if self.per_block else ()
+        return ConsensusDiagnostics(
+            primal_resid=jnp.zeros(resid_shape, dt),
+            dual_resid=jnp.zeros(resid_shape, dt),
+            rho=rho0,
+            kappa=jnp.zeros((), dt),
+            clip_count=jnp.zeros((), jnp.int32),
+            reset_count=jnp.zeros((), jnp.int32),
+            dual_on=jnp.zeros((), dt),
+            link_frac=jnp.ones((), dt))
 
     # -- residual norms in natural-parameter space ------------------------
     def _block_norms(self, z, onehot, *, axis=None):
@@ -815,33 +850,245 @@ class MeshExecutor(NamedTuple):
 
 
 # ---------------------------------------------------------------------------
-# The engine
+# Sessions + explicit state: the resumable half of the engine.  `run_vb`
+# below is a thin (bit-exact) wrapper over vb_init -> vb_run.
 # ---------------------------------------------------------------------------
+class VBSession:
+    """The STATIC half of a VB session: model x topology x executor x
+    hyperparameters, plus the per-node data buffers.
+
+    Everything here is configuration (or host-owned data arrays) that does
+    not evolve with the iteration; the evolving arrays live in `VBState`,
+    which carries a reference to its session as pytree *aux data* — so
+    `jax.lax.scan` / `jax.jit` treat it as structure, and
+    `checkpoint.ckpt.save` never serialises it (a checkpoint holds arrays
+    only; `vb_init` rebuilds the session on restore).
+    """
+
+    __slots__ = ("model", "data", "topology", "schedule", "replication",
+                 "ref_phi", "executor", "minibatch", "diagnostics",
+                 "metric_nodes")
+
+    def __init__(self, model, data, topology, schedule, replication,
+                 ref_phi, executor, minibatch, diagnostics, metric_nodes):
+        self.model = model
+        self.data = data
+        self.topology = topology
+        self.schedule = schedule
+        self.replication = replication
+        self.ref_phi = ref_phi
+        self.executor = executor
+        self.minibatch = minibatch
+        self.diagnostics = diagnostics
+        self.metric_nodes = metric_nodes
+
+    def with_data(self, data) -> "VBSession":
+        """Same session over NEW per-node buffers — the mid-flight data
+        arrival path (the streaming scenario the paper is written for).
+        Every leaf must keep its shape and dtype: append new points into a
+        node's padding slots via `model.append_node_data`, or replace a
+        buffer outright."""
+        old = jax.tree_util.tree_leaves(self.data)
+        new = jax.tree_util.tree_leaves(data)
+        if len(old) != len(new) or any(
+                o.shape != n.shape or o.dtype != n.dtype
+                for o, n in zip(old, new)):
+            raise ValueError(
+                "with_data: new buffers must match the session's data "
+                "shapes/dtypes exactly (append into padding slots or "
+                "replace same-shape buffers)")
+        return VBSession(self.model, data, self.topology, self.schedule,
+                         self.replication, self.ref_phi, self.executor,
+                         self.minibatch, self.diagnostics, self.metric_nodes)
+
+
+@jax.tree_util.register_pytree_with_keys_class
+class VBState:
+    """Checkpointable per-iteration state of a VB session (a pytree).
+
+    phi : (N, P) current natural parameters per node.
+    t : () int32 — ABSOLUTE iteration count.  Every per-iteration source
+        of randomness (minibatch reshuffling epochs/windows, link-failure
+        schedules, the eta_t/kappa_t ramps) is keyed on t, which is what
+        makes a split run (`vb_run(s, a)` then `vb_run(., b)`) bit-exact
+        with the unsplit `vb_run(s, a+b)`.
+    carry : topology carry — ADMM duals lambda_i, and under the adaptive
+        subsystem (rho, warmup-gate, ramp) state; None for combine
+        topologies.
+    stream : `stream.StreamState` (per-node keys + the current epoch's
+        permutation) when the session streams minibatches, else None.
+    diag : most recent `ConsensusDiagnostics` record (ADMM topologies;
+        structure-stable from t=0 via `topology.init_diag`), else None.
+    session : the static `VBSession` (pytree aux data — never serialised;
+        `checkpoint.ckpt.save(path, state)` stores the arrays above and
+        `ckpt.restore(path, vb_init(...))` re-attaches a fresh session).
+    """
+
+    __slots__ = ("phi", "t", "carry", "stream", "diag", "session")
+
+    def __init__(self, phi, t, carry=None, stream=None, diag=None,
+                 session=None):
+        self.phi = phi
+        self.t = t
+        self.carry = carry
+        self.stream = stream
+        self.diag = diag
+        self.session = session
+
+    def tree_flatten_with_keys(self):
+        from jax.tree_util import GetAttrKey
+        children = tuple(
+            (GetAttrKey(name), getattr(self, name))
+            for name in ("phi", "t", "carry", "stream", "diag"))
+        return children, self.session
+
+    @classmethod
+    def tree_unflatten(cls, session, children):
+        return cls(*children, session=session)
+
+    def replace(self, **kw) -> "VBState":
+        args = {name: kw.pop(name, getattr(self, name))
+                for name in ("phi", "t", "carry", "stream", "diag",
+                             "session")}
+        if kw:
+            raise TypeError(f"unknown VBState fields: {sorted(kw)}")
+        return VBState(**args)
+
+    def with_data(self, data) -> "VBState":
+        """State bound to updated per-node buffers (see
+        `VBSession.with_data`)."""
+        if self.session is None:
+            raise ValueError("state has no session attached")
+        return self.replace(session=self.session.with_data(data))
+
+    def __repr__(self):
+        n, p = self.phi.shape
+        try:
+            t = int(self.t)
+        except (TypeError, jax.errors.TracerArrayConversionError):
+            t = "<traced>"
+        return (f"VBState(t={t}, nodes={n}, flat_dim={p}, "
+                f"carry={'yes' if self.carry is not None else 'no'}, "
+                f"stream={'yes' if self.stream is not None else 'no'})")
+
+
+def vb_init(model, data, topology, *, schedule: Schedule = Schedule(),
+            replication: float | None = None,
+            init_phi: Optional[jnp.ndarray] = None,
+            ref_phi: Optional[jnp.ndarray] = None,
+            executor: Optional[MeshExecutor] = None,
+            backend=None,
+            minibatch: Optional[stream.MinibatchSpec] = None,
+            diagnostics: bool = True,
+            metric_nodes: Optional[int] = None) -> VBState:
+    """Open a VB session: validate the configuration and return the t=0
+    `VBState`.  Parameters are exactly `run_vb`'s (minus `n_iters`); see
+    its docstring.  The returned state advances with `vb_step` /
+    `vb_run`, checkpoints with `checkpoint.ckpt.save(path, state)`, and
+    restores with `ckpt.restore(path, vb_init(<same config>))`.
+    """
+    if backend is not None:
+        with_backend = getattr(model, "with_backend", None)
+        if with_backend is None:
+            raise ValueError(
+                f"{type(model).__name__} does not support compute-backend "
+                "selection (no with_backend method)")
+        model = with_backend(backend)
+    if not getattr(topology, "uses_schedule", True) \
+            and schedule != Schedule():
+        raise ValueError(
+            f"{type(topology).__name__} has no natural-gradient step "
+            "(Eq. 27a); it ignores `schedule` — pass the default")
+    if executor is not None and metric_nodes is not None:
+        raise ValueError("metric_nodes is only supported on the "
+                         "single-array executor")
+    n_nodes = jax.tree_util.tree_leaves(data)[0].shape[0]
+    if replication is None:
+        replication = float(n_nodes)
+    if init_phi is None:
+        init_phi = jnp.broadcast_to(model.init_phi(),
+                                    (n_nodes, model.flat_dim))
+    carry0 = topology.init_carry(init_phi, model)
+
+    stream0 = None
+    if minibatch is not None:
+        if minibatch.batch_size < 1:
+            raise ValueError(f"batch_size must be >= 1: {minibatch}")
+        if getattr(model, "take_minibatch", None) is None:
+            raise ValueError(
+                f"{type(model).__name__} does not support streaming "
+                "minibatches (no take_minibatch/data_mask methods)")
+        capacity = model.data_mask(data).shape[1]   # also validates shape
+        if minibatch.batch_size > capacity:
+            # covering the whole node = the bit-exact full-batch path
+            minibatch = minibatch._replace(batch_size=int(capacity))
+        stream0 = stream.init_state(n_nodes, minibatch.seed, int(capacity))
+
+    diag0 = topology.init_diag(model, init_phi) if diagnostics else None
+    session = VBSession(model, data, topology, schedule, replication,
+                        ref_phi, executor, minibatch, diagnostics,
+                        metric_nodes)
+    return VBState(phi=init_phi, t=jnp.zeros((), jnp.int32), carry=carry0,
+                   stream=stream0, diag=diag0, session=session)
+
+
+def _iteration(model, data, base_mask, topology, schedule, replication,
+               minibatch, phi, carry, st, t, *, axis=None, local=None):
+    """ONE VB iteration — the kernel shared by `_scan_steps` (both
+    executors), `vb_step`, and the serving fleet (`session_step_fn`).
+
+    Streaming path: gather this iteration's per-node minibatch; the scaled
+    mask (capacity/batch on selected points) keeps the sufficient
+    statistics unbiased, so phi* becomes the stochastic estimate the
+    Robbins-Monro eta_t (Eq. 22) assumes and the 27a step is a genuine
+    stochastic natural-gradient step.
+    """
+    if minibatch is None:
+        data_t, st_new = data, st
+    else:
+        st_new, idx, mb_mask = stream.advance(st, base_mask, t,
+                                              minibatch.batch_size)
+        data_t = model.take_minibatch(data, idx, mb_mask)
+    phi_star = model.local_optimum(data_t, phi, replication)
+    phi_new, carry_new, diag = topology.step(model, phi, carry, phi_star, t,
+                                             schedule, axis=axis,
+                                             local=local)
+    return phi_new, carry_new, st_new, diag
+
+
+def session_step_fn(session: VBSession, *, axis=None, local=None):
+    """One-iteration kernel over raw state pytrees, with the data buffers
+    as an ARGUMENT: fn(data, phi, carry, stream, t) -> (phi', carry',
+    stream', diag).  This is the function the serving layer
+    (serving/vb_service.py) vmaps over a leading fleet axis — per-session
+    data must be a mapped operand, which is why it is not closed over."""
+    model, topology = session.model, session.topology
+    schedule, replication = session.schedule, session.replication
+    minibatch = session.minibatch
+
+    def fn(data, phi, carry, st, t):
+        base_mask = model.data_mask(data) if minibatch is not None else None
+        return _iteration(model, data, base_mask, topology, schedule,
+                          replication, minibatch, phi, carry, st, t,
+                          axis=axis, local=local)
+
+    return fn
+
+
 def _scan_steps(model, data, topology, schedule, replication, ref_phi,
-                n_iters, phi0, carry0, *, axis=None, local=None,
-                diagnostics=True, metric_nodes=None, minibatch=None,
-                stream_keys=None):
-    """The per-iteration kernel, shared verbatim by both executors."""
+                n_iters, phi0, carry0, *, t0=None, stream0=None, axis=None,
+                local=None, diagnostics=True, metric_nodes=None,
+                minibatch=None):
+    """`n_iters` iterations as one lax.scan, shared verbatim by both
+    executors.  `t0` resumes from an absolute iteration count; `stream0`
+    is the carried minibatch-sampler state."""
     base_mask = model.data_mask(data) if minibatch is not None else None
 
     def step(carry, t):
-        phi, aux = carry
-        if minibatch is None:
-            data_t = data
-        else:
-            # streaming path: gather this iteration's per-node minibatch;
-            # the scaled mask (capacity/batch on selected points) keeps
-            # the sufficient statistics unbiased, so phi* becomes the
-            # stochastic estimate the Robbins-Monro eta_t (Eq. 22)
-            # assumes and the 27a step is a genuine stochastic
-            # natural-gradient step
-            idx, mb_mask = stream.minibatch_select(
-                stream_keys, base_mask, t, minibatch.batch_size)
-            data_t = model.take_minibatch(data, idx, mb_mask)
-        phi_star = model.local_optimum(data_t, phi, replication)
-        phi_new, aux_new, diag = topology.step(model, phi, aux, phi_star, t,
-                                               schedule, axis=axis,
-                                               local=local)
+        phi, aux, st = carry
+        phi_new, aux_new, st_new, diag = _iteration(
+            model, data, base_mask, topology, schedule, replication,
+            minibatch, phi, aux, st, t, axis=axis, local=local)
         phi_m = phi_new if metric_nodes is None else phi_new[:metric_nodes]
         kl = kl_to_reference(model, phi_m, ref_phi)
         if diagnostics:
@@ -854,11 +1101,54 @@ def _scan_steps(model, data, topology, schedule, replication, ref_phi,
         else:
             msd = jnp.zeros((), phi_new.dtype)
             diag = None
-        return (phi_new, aux_new), (kl, msd, diag)
+        return (phi_new, aux_new, st_new), (kl, msd, diag)
 
-    (phi, _), (kls, msds, diags) = jax.lax.scan(step, (phi0, carry0),
-                                                jnp.arange(n_iters))
-    return phi, kls, msds, diags
+    ts = jnp.arange(n_iters)
+    if t0 is not None:
+        ts = ts + t0
+    (phi, aux, st), (kls, msds, diags) = jax.lax.scan(
+        step, (phi0, carry0, stream0), ts)
+    return phi, aux, st, kls, msds, diags
+
+
+def vb_run(state: VBState, n_iters: int) -> tuple[VBState, VBRun]:
+    """Advance a session `n_iters` iterations; returns (state', VBRun).
+
+    Scans the `vb_step` kernel from the state's absolute iteration count,
+    so runs compose bit-exactly: `vb_run(s, a + b)` equals
+    `vb_run(vb_run(s, a)[0], b)` on every topology, executor, backend and
+    streaming configuration (tests/test_session.py) — iteration-indexed
+    randomness (minibatch epochs, link-drop schedules) and the eta_t /
+    kappa_t ramps are all functions of the absolute t carried in the
+    state.  The `VBRun` covers the `n_iters` iterations of THIS call."""
+    ses = state.session
+    if ses is None:
+        raise ValueError("VBState has no session attached — create states "
+                         "with vb_init(...)")
+    if ses.executor is None:
+        phi, aux, st, kls, msds, diags = _scan_steps(
+            ses.model, ses.data, ses.topology, ses.schedule,
+            ses.replication, ses.ref_phi, n_iters, state.phi, state.carry,
+            t0=state.t, stream0=state.stream, diagnostics=ses.diagnostics,
+            metric_nodes=ses.metric_nodes, minibatch=ses.minibatch)
+    else:
+        phi, aux, st, kls, msds, diags = _run_vb_sharded(
+            ses, n_iters, state.phi, state.carry, state.stream, state.t)
+    diag_last = (jax.tree_util.tree_map(lambda a: a[-1], diags)
+                 if diags is not None else None)
+    state_new = VBState(
+        phi=phi, t=state.t + jnp.asarray(n_iters, state.t.dtype),
+        carry=aux, stream=st, diag=diag_last, session=ses)
+    run = VBRun(phi=phi, kl_mean=jnp.mean(kls, 1), kl_std=jnp.std(kls, 1),
+                kl_nodes=kls, consensus_err=msds if ses.diagnostics else None,
+                consensus_diag=diags)
+    return state_new, run
+
+
+def vb_step(state: VBState) -> VBState:
+    """Advance a session by ONE iteration (= `vb_run(state, 1)[0]`)."""
+    state, _ = vb_run(state, 1)
+    return state
 
 
 def run_vb(model, data, topology, *, n_iters: int,
@@ -926,104 +1216,82 @@ def run_vb(model, data, topology, *, n_iters: int,
     ((2, 8), (3, 2))
     >>> bool(jnp.all(run.phi[0] == run.phi[1]))          # consensus: exact
     True
+
+    `run_vb` is a thin wrapper over the resumable session API — it is
+    exactly `vb_run(vb_init(<same arguments>), n_iters)[1]`, and is
+    bit-exact with the pre-session engine on every estimator, executor,
+    backend and streaming configuration (the golden-parity and
+    executor-equivalence suites are the oracle).  Use `vb_init` /
+    `vb_step` / `vb_run` directly to pause, checkpoint, resume, or feed
+    newly-arrived data mid-run; use `serving.vb_service.VBService` to
+    serve fleets of sessions.
     """
-    if backend is not None:
-        with_backend = getattr(model, "with_backend", None)
-        if with_backend is None:
-            raise ValueError(
-                f"{type(model).__name__} does not support compute-backend "
-                "selection (no with_backend method)")
-        model = with_backend(backend)
-    if not getattr(topology, "uses_schedule", True) \
-            and schedule != Schedule():
-        raise ValueError(
-            f"{type(topology).__name__} has no natural-gradient step "
-            "(Eq. 27a); it ignores `schedule` — pass the default")
-    if executor is not None and metric_nodes is not None:
-        raise ValueError("metric_nodes is only supported on the "
-                         "single-array executor")
-    n_nodes = jax.tree_util.tree_leaves(data)[0].shape[0]
-    if replication is None:
-        replication = float(n_nodes)
-    if init_phi is None:
-        init_phi = jnp.broadcast_to(model.init_phi(),
-                                    (n_nodes, model.flat_dim))
-    carry0 = topology.init_carry(init_phi, model)
-
-    stream_keys = None
-    if minibatch is not None:
-        if minibatch.batch_size < 1:
-            raise ValueError(f"batch_size must be >= 1: {minibatch}")
-        if getattr(model, "take_minibatch", None) is None:
-            raise ValueError(
-                f"{type(model).__name__} does not support streaming "
-                "minibatches (no take_minibatch/data_mask methods)")
-        capacity = model.data_mask(data).shape[1]   # also validates shape
-        if minibatch.batch_size > capacity:
-            # covering the whole node = the bit-exact full-batch path
-            minibatch = minibatch._replace(batch_size=int(capacity))
-        stream_keys = stream.node_keys(n_nodes, minibatch.seed)
-
-    if executor is None:
-        phi, kls, msds, diags = _scan_steps(
-            model, data, topology, schedule, replication, ref_phi,
-            n_iters, init_phi, carry0, diagnostics=diagnostics,
-            metric_nodes=metric_nodes, minibatch=minibatch,
-            stream_keys=stream_keys)
-        return VBRun(phi=phi, kl_mean=jnp.mean(kls, 1),
-                     kl_std=jnp.std(kls, 1), kl_nodes=kls,
-                     consensus_err=msds if diagnostics else None,
-                     consensus_diag=diags)
-
-    return _run_vb_sharded(model, data, topology, schedule, replication,
-                           ref_phi, n_iters, init_phi, carry0,
-                           executor, diagnostics, minibatch, stream_keys)
+    state = vb_init(model, data, topology, schedule=schedule,
+                    replication=replication, init_phi=init_phi,
+                    ref_phi=ref_phi, executor=executor, backend=backend,
+                    minibatch=minibatch, diagnostics=diagnostics,
+                    metric_nodes=metric_nodes)
+    _, run = vb_run(state, n_iters)
+    return run
 
 
-def _run_vb_sharded(model, data, topology, schedule, replication, ref_phi,
-                    n_iters, init_phi, carry0, executor: MeshExecutor,
-                    diagnostics: bool, minibatch=None,
-                    stream_keys=None) -> VBRun:
-    """shard_map executor: node axis sharded over `executor.axis`."""
-    mesh, axis = executor.mesh, executor.axis
+def _run_vb_sharded(session: VBSession, n_iters, phi0, carry0, stream0, t0):
+    """shard_map executor: node axis sharded over `executor.axis`.
+
+    Returns the same (phi, carry, stream, kls, msds, diags) tuple as
+    `_scan_steps` — the final carry/stream come back through the
+    shard_map outputs with the state specs from
+    `dist/sharding.vb_node_specs`, so `vb_run` can rebuild a complete
+    `VBState` under this executor too.
+    """
+    mesh, axis = session.executor.mesh, session.executor.axis
     from jax.sharding import PartitionSpec
     from repro.dist import sharding
 
+    model, data, topology = session.model, session.data, session.topology
     local_inputs = topology.shard_inputs()          # dict of (N, ...) arrays
     local_keys = tuple(sorted(local_inputs))
     has_carry = carry0 is not None
-    has_stream = stream_keys is not None
+    has_stream = stream0 is not None
+    diagnostics = session.diagnostics
     # diagnostics pytrees are reduced with psum/pmean inside the step, so
     # every shard returns the identical (replicated) value
     has_diag = diagnostics and getattr(topology, "emits_diagnostics", False)
 
+    # stream state: keys/permutation are per-node data, the epoch counter
+    # is replicated (epoch boundaries are global)
+    stream_specs = (stream.StreamState(
+        keys=PartitionSpec(axis), perm=PartitionSpec(axis),
+        epoch=PartitionSpec()) if has_stream else None)
     in_specs, out_specs = sharding.vb_node_specs(
         data, axis=axis, has_carry=has_carry, n_local=len(local_keys),
         carry_specs=topology.carry_specs(axis) if has_carry else None,
-        has_stream=has_stream)
+        stream_specs=stream_specs)
     if has_diag:
         out_specs = out_specs + (PartitionSpec(),)
 
     def run(data_l, phi_l, carry_l, stream_l, *local_vals):
         local = dict(zip(local_keys, local_vals))
-        phi, kls, msds, diags = _scan_steps(
-            model, data_l, topology, schedule, replication, ref_phi,
-            n_iters, phi_l, carry_l if has_carry else None,
+        phi, aux, st, kls, msds, diags = _scan_steps(
+            model, data_l, topology, session.schedule, session.replication,
+            session.ref_phi, n_iters, phi_l,
+            carry_l if has_carry else None, t0=t0,
+            stream0=stream_l if has_stream else None,
             axis=axis, local=local, diagnostics=diagnostics,
-            minibatch=minibatch,
-            stream_keys=stream_l if has_stream else None)
+            minibatch=session.minibatch)
+        aux = aux if has_carry else jnp.zeros((), phi.dtype)
+        st = st if has_stream else jnp.zeros((), phi.dtype)
         if has_diag:
-            return phi, kls, msds, diags
-        return phi, kls, msds
+            return phi, aux, st, kls, msds, diags
+        return phi, aux, st, kls, msds
 
     fn = compat.shard_map(run, mesh=mesh, in_specs=in_specs,
                           out_specs=out_specs, check_vma=False)
-    out = fn(data, init_phi,
-             carry0 if has_carry else jnp.zeros((), init_phi.dtype),
-             stream_keys if has_stream else jnp.zeros((), init_phi.dtype),
+    out = fn(data, phi0,
+             carry0 if has_carry else jnp.zeros((), phi0.dtype),
+             stream0 if has_stream else jnp.zeros((), phi0.dtype),
              *(local_inputs[k] for k in local_keys))
-    phi, kls, msds = out[:3]
-    diags = out[3] if has_diag else None
-    return VBRun(phi=phi, kl_mean=jnp.mean(kls, 1), kl_std=jnp.std(kls, 1),
-                 kl_nodes=kls, consensus_err=msds if diagnostics else None,
-                 consensus_diag=diags)
+    phi, aux, st, kls, msds = out[:5]
+    diags = out[5] if has_diag else None
+    return (phi, aux if has_carry else None, st if has_stream else None,
+            kls, msds, diags)

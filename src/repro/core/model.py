@@ -107,6 +107,16 @@ class ConjugateExpModel(Protocol):
         structure with the sample axis shrunk to B."""
         ...
 
+    def append_node_data(self, data: Any, node: int, points: Any) -> Any:
+        """Mid-flight data arrival: write `points` (the model's per-node
+        observation format, leading axis = new samples) into node
+        `node`'s free padding slots (mask == 0) and mark them valid.
+        Returns a data pytree of IDENTICAL shapes/dtypes (buffers are
+        fixed-capacity), so a live session/fleet keeps its compiled step.
+        Raises ValueError when the node's buffer has no free capacity.
+        Host-side (eager) — the serving layer calls it between slices."""
+        ...
+
 
 # ---------------------------------------------------------------------------
 # Bayesian GMM (the paper's worked example)
@@ -158,6 +168,20 @@ class GMMModel:
     def take_minibatch(self, data, idx, mb_mask):
         x, _ = data
         return jnp.take_along_axis(x, idx[:, :, None], axis=1), mb_mask
+
+    def append_node_data(self, data, node, points):
+        x, mask = data
+        points = jnp.asarray(points, x.dtype)
+        if points.ndim == 1:
+            points = points[None]
+        free = jnp.where(mask[node] <= 0)[0]            # host-side eager
+        if free.shape[0] < points.shape[0]:
+            raise ValueError(
+                f"node {node}: buffer full ({int(free.shape[0])} free "
+                f"slot(s), {int(points.shape[0])} new point(s))")
+        slots = free[:points.shape[0]]
+        return (x.at[node, slots].set(points),
+                mask.at[node, slots].set(jnp.ones((), mask.dtype)))
 
     def project_to_domain(self, phi: jnp.ndarray) -> jnp.ndarray:
         return expfam.project_to_domain(phi, self.K, self.D)
@@ -254,3 +278,21 @@ class LinRegModel:
         X, y, _ = self._raw_data(data)
         return (jnp.take_along_axis(X, idx[:, :, None], axis=1),
                 jnp.take_along_axis(y, idx, axis=1), mb_mask)
+
+    def append_node_data(self, data, node, points):
+        """`points` is an (X_new (M, D), y_new (M,)) pair."""
+        X, y, mask = self._raw_data(data)
+        X_new, y_new = points
+        X_new = jnp.asarray(X_new, X.dtype)
+        y_new = jnp.asarray(y_new, y.dtype)
+        if X_new.ndim == 1:
+            X_new, y_new = X_new[None], jnp.atleast_1d(y_new)
+        free = jnp.where(mask[node] <= 0)[0]            # host-side eager
+        if free.shape[0] < X_new.shape[0]:
+            raise ValueError(
+                f"node {node}: buffer full ({int(free.shape[0])} free "
+                f"slot(s), {int(X_new.shape[0])} new point(s))")
+        slots = free[:X_new.shape[0]]
+        return (X.at[node, slots].set(X_new),
+                y.at[node, slots].set(y_new),
+                mask.at[node, slots].set(jnp.ones((), mask.dtype)))

@@ -13,9 +13,21 @@ missing sampling layer:
   key is per-node data (sharded along the node axis exactly like x), the
   single-array executor, the shard_map executor and both compute backends
   draw IDENTICAL minibatches for node i at iteration t.
-* `minibatch_select(keys, base_mask, t, batch_size)` — the per-iteration
-  sampler used inside `engine._scan_steps`, returning gather indices plus
-  a *scaled* mask.
+* `StreamState(keys, perm, epoch)` — the carried sampler state owned by
+  `engine.VBState`: the per-node fold-in keys plus the CURRENT epoch's
+  permutation.  `init_state` builds it, `advance(state, base_mask, t,
+  batch_size)` is the per-iteration sampler used inside
+  `engine._scan_steps`: it refreshes the permutation only at epoch
+  boundaries (a scalar-predicate `lax.cond`, so steady-state iterations
+  pay an O(B) gather instead of the old O(T log T) per-step redraw) and
+  returns gather indices plus a *scaled* mask.  Because the refreshed
+  permutation is the same `fold_in(key, epoch)` draw the stateless
+  sampler makes, the carried path is BIT-EXACT with it — and because
+  everything is keyed on the ABSOLUTE iteration t, a run split across
+  `vb_run` calls (or a checkpoint restore) replays the identical stream.
+* `minibatch_select(keys, base_mask, t, batch_size)` — the stateless
+  reference sampler (kept as the oracle the carried path is tested
+  against).
 
 Sampling is *random reshuffling* (epoch cycling): each epoch draws a fresh
 uniform permutation of the node's sample slots and the iterations of that
@@ -72,6 +84,65 @@ def node_keys(n_nodes: int, seed: int) -> jnp.ndarray:
     base = jax.random.PRNGKey(seed)
     return jax.vmap(lambda i: jax.random.fold_in(base, i))(
         jnp.arange(n_nodes))
+
+
+class StreamState(NamedTuple):
+    """Carried sampler state: one epoch permutation per node.
+
+    keys : (N, 2) uint32 per-node fold-in keys (`node_keys`); constant.
+    perm : (N, T) int32 — epoch `epoch`'s reshuffling permutation of each
+        node's sample slots.
+    epoch : () int32 — the epoch `perm` belongs to (refreshed by `advance`
+        when the absolute iteration crosses an epoch boundary).
+    """
+
+    keys: jnp.ndarray
+    perm: jnp.ndarray
+    epoch: jnp.ndarray
+
+
+def _epoch_perms(keys: jnp.ndarray, epoch: jnp.ndarray,
+                 capacity: int) -> jnp.ndarray:
+    """(N, T) epoch permutations — the same `fold_in(key, epoch)` draw as
+    the stateless `_select_one`, so carried and stateless paths agree
+    bit-for-bit."""
+    return jax.vmap(lambda k: jax.random.permutation(
+        jax.random.fold_in(k, epoch), capacity))(keys).astype(jnp.int32)
+
+
+def init_state(n_nodes: int, seed: int, capacity: int) -> StreamState:
+    """Stream state at t=0: per-node keys + the epoch-0 permutations."""
+    keys = node_keys(n_nodes, seed)
+    epoch0 = jnp.zeros((), jnp.int32)
+    return StreamState(keys, _epoch_perms(keys, epoch0, capacity), epoch0)
+
+
+def advance(state: StreamState, base_mask: jnp.ndarray, t: jnp.ndarray,
+            batch_size: int):
+    """Carried-permutation form of `minibatch_select`.
+
+    Returns (state', idx (N, B) int32, mb_mask (N, B) scaled mask) for the
+    ABSOLUTE iteration t.  The permutation refresh happens only when t
+    crosses an epoch boundary (scalar-predicate `lax.cond`: epochs are
+    global because every node shares the padded capacity T), and the
+    refresh draw is identical to the stateless sampler's, so the
+    trajectory of (idx, mb_mask) is bit-exact with `minibatch_select` —
+    including across a `vb_run` split or checkpoint restore, since epoch
+    and chunk are pure functions of t.
+    """
+    T = base_mask.shape[1]
+    batch_size = min(batch_size, T)
+    n_chunks = -(-T // batch_size)                    # ceil: cover everything
+    epoch = (t // n_chunks).astype(state.epoch.dtype)
+    chunk = t % n_chunks
+    perm = jax.lax.cond(epoch != state.epoch,
+                        lambda: _epoch_perms(state.keys, epoch, T),
+                        lambda: state.perm)
+    pos = (chunk * batch_size + jnp.arange(batch_size)) % T
+    idx = jnp.sort(jnp.take(perm, pos, axis=1), axis=1).astype(jnp.int32)
+    picked = jnp.take_along_axis(base_mask, idx, axis=1)  # 0 where padding
+    scale = jnp.asarray(T / batch_size, base_mask.dtype)
+    return StreamState(state.keys, perm, epoch), idx, picked * scale
 
 
 def _select_one(key: jnp.ndarray, base_mask: jnp.ndarray, t: jnp.ndarray,

@@ -80,13 +80,19 @@ def param_shardings(tree, mesh: Mesh, *, fsdp: bool = False,
 
 
 def vb_node_specs(data, *, axis: str, has_carry: bool, n_local: int,
-                  carry_specs=None, has_stream: bool = False):
+                  carry_specs=None, stream_specs=None):
     """(in_specs, out_specs) for the VB engine's shard_map executor
     (core/engine._run_vb_sharded): every per-node array — the data pytree's
     leaves, the phi iterate, the topology carry (ADMM duals) and the
     topology's `shard_inputs` rows (weight/adjacency rows) — shards its
-    leading node axis over the mesh axis `axis`; outputs are
-    (phi (N, P), kl trajectories (T, N), consensus error (T,)).
+    leading node axis over the mesh axis `axis`.
+
+    This is the partitioning rule for the session-state pytree
+    (`engine.VBState`): the state slots (phi, carry, stream) appear in
+    BOTH spec tuples, because the executor now returns the final state —
+    not just the iterate — so `vb_run` can resume / checkpoint under the
+    mesh executor too.  Outputs are (phi (N, P), carry, stream,
+    kl trajectories (T, N), consensus error (T,)).
 
     `carry_specs` overrides the default node-sharded carry spec for
     topologies whose carry mixes per-node state with replicated scalars
@@ -94,9 +100,10 @@ def vb_node_specs(data, *, axis: str, has_carry: bool, n_local: int,
     warmup-gate state, which every shard holds identically — see
     `ADMMConsensus.carry_specs`).
 
-    `has_stream` marks the streaming-minibatch key slot (the (N, 2)
-    per-node PRNG keys of data/stream.py) as node-sharded; without it the
-    slot carries a replicated dummy scalar.
+    `stream_specs` is the spec pytree for the streaming sampler state
+    (`data/stream.StreamState`: per-node keys and epoch permutation
+    node-sharded, the epoch counter replicated — the engine passes it);
+    without it the slot carries a replicated dummy scalar.
 
     One home for the engine's partitioning rule so the compute backends
     (core/backends.py) and the executors agree on what "node-sharded"
@@ -109,10 +116,10 @@ def vb_node_specs(data, *, axis: str, has_carry: bool, n_local: int,
         carry_spec = carry_specs if carry_specs is not None else node
     else:
         carry_spec = P()
-    stream_spec = node if has_stream else P()
+    stream_spec = stream_specs if stream_specs is not None else P()
     in_specs = (data_specs, node, carry_spec, stream_spec) \
         + (node,) * n_local
-    out_specs = (node, P(None, axis), P(None))
+    out_specs = (node, carry_spec, stream_spec, P(None, axis), P(None))
     return in_specs, out_specs
 
 

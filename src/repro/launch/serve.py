@@ -21,10 +21,13 @@ def main():
 
     from repro.configs.base import get_smoke_config
     from repro.models import model as model_lib
+    from repro.serving import admission
     from repro.serving import engine as eng
 
     cfg = get_smoke_config(args.arch)
-    mesh = jax.make_mesh((1,), ("data",))
+    # one data axis over whatever devices exist (a single real CPU device
+    # in the smoke container, every device elsewhere)
+    mesh = admission.data_axis_mesh("data")
     params = model_lib.init_params(cfg, jax.random.PRNGKey(0))
     e = eng.Engine(cfg, mesh, params,
                    max_seq=args.prompt_len + args.max_new + cfg.frontend_len,

@@ -1,0 +1,70 @@
+"""Request-admission helpers shared by the serving engines.
+
+Both serving stacks admit heterogeneous requests and must turn them into
+fixed-shape device batches:
+
+* the LM `serving.engine.Engine` admits variable-length prompts and packs
+  them into one right-aligned (B, L) token batch (`right_aligned_batch`);
+* the VB `serving.vb_service.VBService` admits sensor-network sessions
+  and may only fleet-batch requests whose data pytrees agree exactly in
+  shape and dtype (`shape_signature` is the admission key that decides
+  which sessions share a vmapped fleet).
+
+One home for those rules so the two engines cannot drift apart, plus
+`data_axis_mesh` — the "1-D data mesh over whatever devices exist" both
+serving smokes want (the LM smoke used to hardcode a single-device mesh).
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+
+def right_aligned_batch(seqs, length: int | None = None,
+                        dtype=np.int32, pad_value: int = 0) -> np.ndarray:
+    """Stack variable-length 1-D sequences into a right-aligned (B, L)
+    array (left-padded with `pad_value`), the layout the LM prefill
+    expects.  `length` pads to a fixed L and must cover the longest
+    sequence (ValueError otherwise — truncation is the caller's policy);
+    default: the longest sequence.
+
+    >>> right_aligned_batch([[1, 2, 3], [7]]).tolist()
+    [[1, 2, 3], [0, 0, 7]]
+    >>> right_aligned_batch([[1, 2]], length=4).tolist()
+    [[0, 0, 1, 2]]
+    """
+    seqs = [np.asarray(s, dtype) for s in seqs]
+    longest = max((s.shape[0] for s in seqs), default=0)
+    if length is None:
+        length = longest
+    if length < longest:
+        raise ValueError(f"length {length} < longest sequence {longest}")
+    out = np.full((len(seqs), length), pad_value, dtype)
+    for i, s in enumerate(seqs):
+        if s.shape[0]:
+            out[i, length - s.shape[0]:] = s
+    return out
+
+
+def shape_signature(tree) -> tuple:
+    """Hashable shape/dtype signature of a pytree — requests whose data
+    signatures (and static hyper) agree may share one compiled batch.
+
+    >>> import jax.numpy as jnp
+    >>> a = (jnp.zeros((3, 4)), jnp.zeros((3,), jnp.int32))
+    >>> b = (jnp.ones((3, 4)), jnp.ones((3,), jnp.int32))
+    >>> shape_signature(a) == shape_signature(b)
+    True
+    >>> shape_signature(a) == shape_signature((a[0],))
+    False
+    """
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return (str(treedef),) + tuple(
+        (tuple(leaf.shape), str(leaf.dtype)) for leaf in leaves)
+
+
+def data_axis_mesh(axis: str = "data"):
+    """1-D mesh with `axis` spanning ALL available devices.  The serving
+    smokes default to this instead of hardcoding a single-device mesh, so
+    multi-device hosts (or XLA_FLAGS host-platform devices) are used."""
+    return jax.make_mesh((jax.device_count(),), (axis,))

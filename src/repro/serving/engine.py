@@ -19,6 +19,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.configs.base import ModelConfig
 from repro.dist import compat, sharding  # noqa: F401  (sharding: policy API)
 from repro.models import model as model_lib
+from repro.serving import admission
 
 
 # ---------------------------------------------------------------------------
@@ -99,11 +100,10 @@ class Engine:
         """Batched greedy/temperature generation."""
         cfg = self.cfg
         B = len(requests)
-        plen = max(len(r.prompt) for r in requests)
-        plen = max(plen, cfg.frontend_len + 1)
-        toks = np.zeros((B, plen), np.int32)
-        for i, r in enumerate(requests):
-            toks[i, plen - len(r.prompt):] = r.prompt  # right-aligned
+        plen = max(max(len(r.prompt) for r in requests),
+                   cfg.frontend_len + 1)
+        toks = admission.right_aligned_batch(
+            [r.prompt for r in requests], length=plen)
         frontend = None
         if cfg.frontend != "none":
             frontend = jnp.zeros((B, cfg.frontend_len, cfg.d_model),

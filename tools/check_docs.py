@@ -7,22 +7,120 @@
    ISSUE.md (e.g. `docs/ARCHITECTURE.md`, `benchmarks/consensus_bench.py`)
    must exist, so the issue's deliverables cannot silently drop out of the
    tree.
+3. Eq→code map symbol check — every dotted code reference named in
+   docs/ARCHITECTURE.md's "Equation → code map" section (e.g.
+   `engine.FusionCenter.combine`, `optim.consensus.adapt_rho`) must still
+   import/resolve, so engine refactors cannot silently strand the map
+   (rename drift).
 
 Exits non-zero with a per-problem report on failure.
 """
 from __future__ import annotations
 
+import importlib
+import inspect
 import os
 import re
 import sys
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(ROOT, "src"))
 
 MD_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
 # backtick refs in ISSUE.md that look like tree paths (contain a slash and
 # one of the repo's top-level dirs); `pkg/mod.py::sym` checks the file part
 ISSUE_PATH = re.compile(
     r"`((?:src|docs|tests|benchmarks|examples|tools|\.github)/[^`\s]+)`")
+
+# backticked pure dotted identifiers (`engine.run_vb`, `model.GMMModel
+# .local_optimum`) inside the eq→code map section
+DOTTED_SYM = re.compile(r"`([A-Za-z_][A-Za-z0-9_]*(?:\.[A-Za-z0-9_]+)+)`")
+
+# head alias -> import path it abbreviates in the docs.  Heads not listed
+# here are skipped (file paths, field names etc. have their own checks).
+SYM_ALIASES = {
+    "engine": "repro.core.engine",
+    "model": "repro.core.model",
+    "expfam": "repro.core.expfam",
+    "linreg": "repro.core.linreg",
+    "gmm": "repro.core.gmm",
+    "network": "repro.core.network",
+    "stream": "repro.data.stream",
+    "algorithms": "repro.core.algorithms",
+    "distributed": "repro.core.distributed",
+    "backends": "repro.core.backends",
+    "optim": "repro.optim",
+    "ckpt": "repro.checkpoint.ckpt",
+    "vb_service": "repro.serving.vb_service",
+    "admission": "repro.serving.admission",
+    "GMMModel": "repro.core.model.GMMModel",
+    "LinRegModel": "repro.core.model.LinRegModel",
+    "ConsensusDiagnostics": "repro.core.engine.ConsensusDiagnostics",
+    "MinibatchSpec": "repro.data.stream.MinibatchSpec",
+    "StreamState": "repro.data.stream.StreamState",
+    "VBState": "repro.core.engine.VBState",
+    "VBService": "repro.serving.vb_service.VBService",
+    "VBRequest": "repro.serving.vb_service.VBRequest",
+}
+
+
+def _resolve_symbol(full: str) -> bool:
+    """True iff the dotted path resolves: the longest importable module
+    prefix, then getattr down; a final attribute that lives on a CLASS in
+    the module (protocol/instance methods written `model.take_minibatch`)
+    also counts."""
+    parts = full.split(".")
+    obj, consumed = None, 0
+    for i in range(len(parts), 0, -1):
+        try:
+            obj = importlib.import_module(".".join(parts[:i]))
+            consumed = i
+            break
+        except ImportError:
+            continue
+    if obj is None:
+        return False
+    rest = parts[consumed:]
+    for j, name in enumerate(rest):
+        if hasattr(obj, name):
+            obj = getattr(obj, name)
+            continue
+        if inspect.ismodule(obj) and j == len(rest) - 1:
+            # `model.take_minibatch`-style: a method of some class in
+            # the module
+            return any(hasattr(cls, name)
+                       for _, cls in inspect.getmembers(obj, inspect.isclass))
+        return False
+    return True
+
+
+def check_eq_code_map(arch_path: str) -> list[str]:
+    """Every dotted symbol in the eq→code map section must resolve."""
+    if not os.path.exists(arch_path):
+        return ["docs/ARCHITECTURE.md missing (eq→code map check)"]
+    with open(arch_path, encoding="utf-8") as f:
+        text = f.read()
+    m = re.search(r"^## Equation → code map$(.*?)(?=^## )", text,
+                  re.M | re.S)
+    if not m:
+        return ["docs/ARCHITECTURE.md: no '## Equation → code map' section"]
+    problems, seen = [], set()
+    for tok in DOTTED_SYM.findall(m.group(1)):
+        if tok in seen:
+            continue
+        seen.add(tok)
+        head = tok.split(".", 1)[0]
+        if head not in SYM_ALIASES:
+            continue                       # not a code alias we vouch for
+        full = SYM_ALIASES[head] + tok[len(head):]
+        if not _resolve_symbol(full):
+            problems.append(
+                f"ARCHITECTURE.md eq→code map: `{tok}` does not resolve "
+                f"(tried {full}) — rename drift?")
+    if not seen:
+        problems.append("ARCHITECTURE.md eq→code map: no symbols found "
+                        "(check the table formatting)")
+    return problems
 
 
 def check_markdown_links(md_path: str) -> list[str]:
@@ -71,13 +169,15 @@ def main() -> int:
     issue = os.path.join(ROOT, "ISSUE.md")
     if os.path.exists(issue):
         problems += check_issue_files(issue)
+    problems += check_eq_code_map(os.path.join(docs_dir, "ARCHITECTURE.md"))
     if problems:
         print(f"FAIL: {len(problems)} docs problem(s)")
         for p in problems:
             print("  -", p)
         return 1
     print(f"OK: {len(targets)} markdown file(s) link-checked, "
-          "ISSUE.md file references all present")
+          "ISSUE.md file references all present, eq→code map symbols "
+          "resolve")
     return 0
 
 
