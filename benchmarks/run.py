@@ -54,6 +54,8 @@ def main() -> None:
                   ("minibatch_vb", "minibatch_vb", minibatch_bench.run),
                   ("vb_service", "vb_service_throughput",
                    vb_service_bench.run),
+                  ("vb_driver", "vb_driver_poisson",
+                   vb_service_bench.run_poisson),
                   ("consensus_lm", "consensus_lm", consensus_bench.run),
                   ("consensus_vb", "consensus_vb", consensus_bench.vb_run),
                   ("roofline", "roofline", roofline.run)])

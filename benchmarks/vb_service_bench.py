@@ -1,11 +1,21 @@
-"""VBService fleet-batching throughput vs sequential `run_vb` calls.
+"""VBService fleet-batching + continuous-batching driver benchmarks.
 
-The serving claim: admitting 16 same-shape sensor-network sessions into
-one vmapped fleet and stepping them in slices beats 16 back-to-back
-`run_vb` calls — the fleet pays ONE trace/compile and runs vectorised,
-while sequential serving pays per-session dispatch.  The bench row
-asserts fleet-batched >= 2x sequential wall-clock (the acceptance
-criterion) and reports sessions/sec + fleet steps/sec.
+`run`: admitting 16 same-shape sensor-network sessions into one vmapped
+fleet and stepping them in slices beats 16 back-to-back `run_vb` calls —
+the fleet pays ONE trace/compile and runs vectorised, while sequential
+serving pays per-session dispatch.  Asserts fleet >= 2x sequential.
+
+`run_poisson`: the continuous-batching claim (ISSUE 6).  Same-shape
+sessions with MIXED budgets arrive as a Poisson process in wall-clock
+time.  The synchronous baseline is the pre-driver serving loop: admit
+whatever has arrived, `run()` the fleet to FULL drain, then look at the
+queue again — short sessions wait out the longest budget in their batch
+and arrivals pile up behind the drain barrier (and every admission wave
+regrows the fleet, recompiling).  The driver serves the same schedule
+through one fixed-capacity fleet with mid-flight join/leave: one
+compile, evictions free slots for queued arrivals at slice boundaries.
+Reports p50/p99 session latency (submit -> finished) and sessions/s for
+both, asserting driver >= 2x the synchronous baseline's sessions/s.
 """
 import time
 
@@ -75,3 +85,104 @@ def run(full: bool = False):
         f"sequential {t_seq:.2f}s)")
     yield ("vb_service_throughput",
            common.us_per_iter(t_fleet, n_iters * n_sessions), derived)
+
+
+def run_poisson(full: bool = False):
+    import numpy as np
+
+    from repro.core import engine, expfam, network
+    from repro.core import model as model_lib
+    from repro.data import synthetic
+    from repro.serving.vb_service import VBRequest, VBService
+
+    expfam.enable_x64()
+    K, D = 3, 2
+    n_sessions = 24 if full else 12
+    n_nodes = 16 if full else 8
+    n_per_node = 50 if full else 25
+    budgets = [40, 80, 160]             # mixed: the drain barrier's worst case
+    max_fleet = 8 if full else 6
+    slice_iters = 10
+
+    prior = expfam.noninformative_prior(K, D, beta0=0.1, w0_scale=10.0)
+    adj, _ = network.random_geometric_graph(n_nodes, seed=0)
+    W = network.nearest_neighbor_weights(adj)
+    mdl = model_lib.GMMModel(prior, K, D)
+    topo = engine.Diffusion(W)
+    reqs = []
+    for s in range(n_sessions):
+        d = synthetic.paper_synthetic(n_nodes=n_nodes,
+                                      n_per_node=n_per_node, seed=s)
+        reqs.append(VBRequest(model=mdl, data=(d.x, d.mask), topology=topo,
+                              n_iters=budgets[s % len(budgets)]))
+
+    # one Poisson arrival schedule (wall-clock), shared by both systems
+    rng = np.random.default_rng(7)
+    gaps = rng.exponential(scale=0.08, size=n_sessions)
+    arrive = np.cumsum(gaps) - gaps[0]  # first session arrives at t=0
+
+    def wait_until(t0, t):
+        now = time.time() - t0
+        if t > now:
+            time.sleep(t - now)
+
+    # -- synchronous baseline: admit arrivals, run() to FULL drain, repeat
+    svc = VBService(slice_iters=slice_iters)
+    submitted, finish = {}, {}
+    t0 = time.time()
+    i = 0
+    while i < n_sessions:
+        wait_until(t0, arrive[i])
+        while i < n_sessions and arrive[i] <= time.time() - t0:
+            submitted[svc.submit(reqs[i])] = i
+            i += 1
+        svc.run()                       # the drain barrier
+        now = time.time() - t0
+        for j in submitted.values():
+            finish.setdefault(j, now)
+    sync_makespan = max(finish.values())
+    sync_lat = np.array([finish[j] - arrive[j] for j in range(n_sessions)])
+    sync_sessions_per_s = n_sessions / sync_makespan
+
+    # -- continuous-batching driver: background scheduler, real-time joins
+    svc2 = VBService(slice_iters=slice_iters, max_fleet=max_fleet)
+    svc2.start()
+    t0 = time.time()
+    rid_of = {}
+    for j in range(n_sessions):
+        wait_until(t0, arrive[j])
+        rid_of[j] = svc2.submit(reqs[j])
+    svc2.drain()
+    drv_makespan = time.time() - t0
+    svc2.stop()
+    stats = svc2.stats()
+    drv_lat = np.array([svc2.status(rid_of[j]).latency_s
+                        for j in range(n_sessions)])
+    drv_sessions_per_s = n_sessions / drv_makespan
+
+    # fidelity guard: the driver must be serving the right answers
+    j0 = int(np.argmin([r.n_iters for r in reqs]))
+    solo = engine.run_vb(mdl, reqs[j0].data, topo,
+                         n_iters=reqs[j0].n_iters, diagnostics=False)
+    err = float(np.max(np.abs(np.asarray(solo.phi)
+                              - np.asarray(svc2.status(rid_of[j0]).phi))))
+    assert err < 1e-8, f"driver diverged from solo run_vb: {err}"
+
+    speedup = drv_sessions_per_s / sync_sessions_per_s
+    derived = (f"sessions_per_s={drv_sessions_per_s:.2f} "
+               f"sync_sessions_per_s={sync_sessions_per_s:.2f} "
+               f"speedup_vs_sync={speedup:.1f}x "
+               f"p50_latency_s={np.percentile(drv_lat, 50):.2f} "
+               f"p99_latency_s={np.percentile(drv_lat, 99):.2f} "
+               f"sync_p50_latency_s={np.percentile(sync_lat, 50):.2f} "
+               f"sync_p99_latency_s={np.percentile(sync_lat, 99):.2f} "
+               f"occupancy={stats.occupancy:.2f} "
+               f"compiles={stats.compiles} evictions={stats.evicted} "
+               f"n_sessions={n_sessions} max_fleet={max_fleet}")
+    assert speedup >= 2.0, (
+        f"continuous batching must serve >= 2x the synchronous drain-loop "
+        f"sessions/s (got {speedup:.2f}x: driver {drv_makespan:.2f}s vs "
+        f"sync {sync_makespan:.2f}s for {n_sessions} sessions)")
+    total_iters = sum(r.n_iters for r in reqs)
+    yield ("vb_driver_poisson",
+           common.us_per_iter(drv_makespan, total_iters), derived)

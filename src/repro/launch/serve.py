@@ -14,6 +14,9 @@ def main():
     ap.add_argument("--max_new", type=int, default=32)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--use_kernels", action="store_true")
+    ap.add_argument("--max_batch", type=int, default=0,
+                    help="slot-table wave width (continuous batching; "
+                         "0 = one wave for all requests)")
     args = ap.parse_args()
 
     import jax
@@ -31,7 +34,8 @@ def main():
     params = model_lib.init_params(cfg, jax.random.PRNGKey(0))
     e = eng.Engine(cfg, mesh, params,
                    max_seq=args.prompt_len + args.max_new + cfg.frontend_len,
-                   use_kernels=args.use_kernels)
+                   use_kernels=args.use_kernels,
+                   max_batch=args.max_batch or None)
     rng = np.random.default_rng(0)
     reqs = [eng.Request(
         rng.integers(0, cfg.vocab_size, args.prompt_len).astype(np.int32),
@@ -39,6 +43,9 @@ def main():
     outs = e.generate(reqs, temperature=args.temperature)
     for i, o in enumerate(outs):
         print(f"request {i}: {o.tolist()}")
+    st = e.stats()
+    print(f"engine: {st.slices} decode steps, {st.compiles} compiles, "
+          f"{st.admitted} requests, occupancy {st.occupancy:.2f}")
 
 
 if __name__ == "__main__":

@@ -12,6 +12,12 @@ early stop, `--topology mixed` alternates diffusion and adaptive ADMM
 fleets, `--push-at` demonstrates mid-flight data arrival, and
 `--ckpt-dir` saves + restores + re-runs session 0 to demonstrate the
 checkpoint path (asserting bit-exactness with the uninterrupted run).
+
+Continuous batching (serving/driver.py): `--max-fleet` fixes the fleet
+capacity — later arrivals queue until an eviction frees a slot, with
+zero recompilation — and `--arrive-at` staggers session admission to
+the given slice boundaries (cycled), demonstrating mid-flight join.
+The run ends by printing the `DriverStats` counters.
 """
 import argparse
 import os
@@ -36,6 +42,12 @@ def main():
     ap.add_argument("--ckpt-dir", default=None,
                     help="save/restore session 0 through this directory "
                          "and assert the resumed run is bit-exact")
+    ap.add_argument("--max-fleet", type=int, default=0,
+                    help="fixed fleet capacity (continuous batching; "
+                         "0 = power-of-two auto-growth)")
+    ap.add_argument("--arrive-at", default="",
+                    help="comma-separated slice boundaries at which each "
+                         "session joins (cycled; empty = all at once)")
     args = ap.parse_args()
 
     import numpy as np
@@ -60,7 +72,11 @@ def main():
     minibatch = (stream.MinibatchSpec(args.minibatch)
                  if args.minibatch else None)
 
-    svc = VBService(slice_iters=args.slice)
+    arrivals = ([int(a) for a in args.arrive_at.split(",")]
+                if args.arrive_at else [0])
+
+    svc = VBService(slice_iters=args.slice,
+                    max_fleet=args.max_fleet or None)
     requests = {}
     for i in range(args.sessions):
         data = synthetic.paper_synthetic(n_nodes=args.nodes,
@@ -71,7 +87,7 @@ def main():
                         topology=topos[order[i % len(order)]],
                         n_iters=budgets[i % len(budgets)],
                         minibatch=minibatch, tol=args.tol)
-        rid = svc.submit(req)
+        rid = svc.submit(req, arrive_at=arrivals[i % len(arrivals)])
         requests[rid] = req
 
     pushed = False
@@ -115,6 +131,12 @@ def main():
               f"restored bit-exact, extended to "
               f"t={svc2.status(rid_r).t}")
 
+    st = svc.stats()
+    print(f"driver: {st.slices} slices, {st.compiles} compiles, "
+          f"{st.admitted} admitted, {st.evicted} evicted, "
+          f"occupancy {st.occupancy:.2f} "
+          f"(padding waste {st.padding_waste:.2f}), "
+          f"{st.checkpoints} background checkpoints")
     print(f"served {args.sessions} session(s) in {n_slices} slice(s)")
 
 

@@ -63,6 +63,37 @@ def shape_signature(tree) -> tuple:
         (tuple(leaf.shape), str(leaf.dtype)) for leaf in leaves)
 
 
+def static_signature(obj):
+    """Hashable structural signature of a model/topology configuration.
+
+    Two separately-constructed objects of the same type whose attributes
+    agree — with ARRAYS compared by identity, so `Diffusion(W)` built
+    twice over the same weight matrix signs equal — produce the same
+    signature and therefore share a fleet group.  Anything unrecognised
+    falls back to object identity (conservative: splits groups, never
+    wrongly merges them).
+    """
+    import jax.numpy as jnp
+
+    if isinstance(obj, (int, float, bool, str, bytes, type(None))):
+        return obj
+    if isinstance(obj, (jnp.ndarray, np.ndarray)):
+        return ("arr", id(obj))
+    if isinstance(obj, tuple):           # incl. NamedTuples (Schedule etc.)
+        return (type(obj).__name__,) + tuple(static_signature(v)
+                                             for v in obj)
+    if hasattr(obj, "__dict__") or hasattr(obj, "__slots__"):
+        names = (sorted(vars(obj)) if hasattr(obj, "__dict__")
+                 else sorted(n for n in obj.__slots__ if hasattr(obj, n)))
+        return (type(obj).__name__,) + tuple(
+            (n, static_signature(getattr(obj, n))) for n in names)
+    try:
+        hash(obj)
+        return obj
+    except TypeError:
+        return ("id", id(obj))
+
+
 def data_axis_mesh(axis: str = "data"):
     """1-D mesh with `axis` spanning ALL available devices.  The serving
     smokes default to this instead of hardcoding a single-device mesh, so

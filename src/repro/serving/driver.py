@@ -1,0 +1,921 @@
+"""Continuous-batching serving driver: fixed-capacity VB fleets with
+mid-flight join/leave, an arrival queue, eviction, and background
+checkpoint writes — the LM-inference-server scheduling model applied to
+sensor-network VB sessions.
+
+The synchronous `VBService` loop (PR 5) serialized everything: admission
+resized the fleet (recompiling the slice function), a finished session's
+slot kept burning device cycles until the whole group drained, and
+checkpoint I/O blocked stepping.  This module replaces that with the
+continuous-batching decomposition used by LM inference engines:
+
+* **SlotTable** — host-side allocator for a FIXED-capacity fleet.  The
+  compiled slice function only ever sees one `(k, capacity)` shape, so
+  sessions join and leave by `.at[slot].set(...)` writes with **zero
+  recompilation** (`FleetGroup` asserts this via its `compiles` counter).
+* **Active mask for free** — a free or evicted slot is written as
+  `conv=True, budget=0`: the per-session budget/early-stop gate that
+  `_gated_step` already applies IS the active mask, so no new in-kernel
+  machinery is needed and frozen slots stay bit-for-bit inert.
+* **ArrivalQueue** — thread-safe `(arrive_at, seq)` heap.  `tick()`
+  admits every ready arrival at the slice boundary, dispatches one slice
+  per group (JAX async dispatch), does host-side work — checkpoint
+  snapshots, bookkeeping — while the device runs, then syncs the small
+  per-slot flag vectors and **evicts** sessions that converged or spent
+  their budget, freeing their slots for the next arrival.
+* **CheckpointWriter** — a daemon thread doing device→host transfer and
+  .npz compression off the scheduler thread, overlapped with the
+  in-flight slice.
+* **Eviction is safe** because of the absolute-`t` resumability contract
+  (engine.VBState): every per-iteration source — minibatch epochs, link
+  drops, eta/kappa ramps — is a pure function of the session's own `t`,
+  so a session's trajectory is independent of WHEN its slices run and a
+  finished-then-extended session re-enters any free slot bit-exactly.
+
+`VBDriver` is the scheduler; `serving/vb_service.py` keeps its public
+API as a thin wrapper, and `serving/engine.py`'s LM `Engine` reuses
+`SlotTable`/`ArrivalQueue`/`DriverStats` for its prefill/decode waves.
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+import os
+import queue as queue_lib
+import threading
+import time
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import ckpt
+from repro.core import engine
+from repro.data import stream as stream_lib
+from repro.serving import admission
+
+
+# ---------------------------------------------------------------------------
+# Generic scheduling primitives (shared with the LM serving engine)
+# ---------------------------------------------------------------------------
+class ArrivalQueue:
+    """Thread-safe arrival queue ordered by (arrive_at, submission seq)."""
+
+    def __init__(self):
+        self._heap: list[tuple[float, int, Any]] = []
+        self._lock = threading.Lock()
+        self._seq = itertools.count()
+
+    def push(self, item: Any, arrive_at: float = 0.0) -> None:
+        with self._lock:
+            heapq.heappush(self._heap,
+                           (float(arrive_at), next(self._seq), item))
+
+    def push_entry(self, entry: tuple[float, int, Any]) -> None:
+        """Re-queue a popped entry unchanged (keeps its FIFO position)."""
+        with self._lock:
+            heapq.heappush(self._heap, entry)
+
+    def pop_ready(self, now: float) -> list[tuple[float, int, Any]]:
+        out = []
+        with self._lock:
+            while self._heap and self._heap[0][0] <= now:
+                out.append(heapq.heappop(self._heap))
+        return out
+
+    def next_arrival(self) -> Optional[float]:
+        with self._lock:
+            return self._heap[0][0] if self._heap else None
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._heap)
+
+
+class SlotTable:
+    """Fixed-capacity slot allocator: which fleet row belongs to which
+    request id.  Lowest free slot first, so admission is deterministic."""
+
+    def __init__(self, capacity: int):
+        self.capacity = int(capacity)
+        self._free = list(range(self.capacity - 1, -1, -1))
+        self.rids: list[Optional[str]] = [None] * self.capacity
+
+    def alloc(self, rid: str) -> Optional[int]:
+        if not self._free:
+            return None
+        slot = self._free.pop()
+        self.rids[slot] = rid
+        return slot
+
+    def free(self, slot: int) -> Optional[str]:
+        rid, self.rids[slot] = self.rids[slot], None
+        self._free.append(slot)
+        self._free.sort(reverse=True)
+        return rid
+
+    def grow(self, new_capacity: int) -> None:
+        extra = range(self.capacity, new_capacity)
+        self.rids.extend([None] * (new_capacity - self.capacity))
+        self._free = sorted(self._free + list(extra), reverse=True)
+        self.capacity = new_capacity
+
+    def occupied(self) -> list[tuple[int, str]]:
+        return [(i, r) for i, r in enumerate(self.rids) if r is not None]
+
+    @property
+    def n_occupied(self) -> int:
+        return self.capacity - len(self._free)
+
+
+class DriverStats(NamedTuple):
+    """Host-side scheduler counters (cumulative unless noted)."""
+
+    slices: int          # device slices dispatched
+    compiles: int        # slice-fn traces across all groups (incl. retired)
+    admitted: int        # sessions placed into a fleet slot
+    evicted: int         # sessions removed at a slice boundary
+    queue_depth: int     # now: sessions waiting for arrival time or a slot
+    active: int          # now: occupied slots that still have work
+    capacity: int        # now: total fleet slots across groups
+    occupancy: float     # time-averaged active/capacity over stepped slices
+    padding_waste: float  # 1 - occupancy: fraction of stepped slots masked
+    checkpoints: int     # background checkpoint writes completed
+
+
+class _PendingSave:
+    """Tiny future for one background checkpoint write."""
+
+    def __init__(self):
+        self._done = threading.Event()
+        self.path: Optional[str] = None
+        self.exc: Optional[BaseException] = None
+
+    def wait(self, timeout: Optional[float] = None) -> str:
+        self._done.wait(timeout)
+        if self.exc is not None:
+            raise self.exc
+        return self.path
+
+
+class CheckpointWriter:
+    """Background checkpoint writes: the device→host transfer and .npz
+    compression run on a daemon thread, overlapped with the in-flight
+    device slice (the snapshot refs are captured at the slice boundary,
+    so what lands on disk is always a valid resumable boundary state)."""
+
+    def __init__(self):
+        self._q: queue_lib.Queue = queue_lib.Queue()
+        self._lock = threading.Lock()
+        self._thread: Optional[threading.Thread] = None
+        self.completed = 0
+
+    def submit(self, tree: Any, path: str) -> _PendingSave:
+        pending = _PendingSave()
+        with self._lock:
+            if self._thread is None or not self._thread.is_alive():
+                self._thread = threading.Thread(target=self._worker,
+                                                daemon=True)
+                self._thread.start()
+        self._q.put((tree, path, pending))
+        return pending
+
+    def _worker(self) -> None:
+        while True:
+            tree, path, pending = self._q.get()
+            try:
+                pending.path = ckpt.save(path, jax.device_get(tree))
+                self.completed += 1
+            except BaseException as e:          # surfaced via pending.wait()
+                pending.exc = e
+            finally:
+                pending._done.set()
+                self._q.task_done()
+
+    def flush(self) -> None:
+        self._q.join()
+
+
+# ---------------------------------------------------------------------------
+# Pytree helpers + the gated slice kernel (moved from vb_service)
+# ---------------------------------------------------------------------------
+def _tree_stack(trees):
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def _tree_index(tree, i):
+    return jax.tree_util.tree_map(lambda leaf: leaf[i], tree)
+
+
+def _tree_set(tree, i, value):
+    return jax.tree_util.tree_map(lambda leaf, v: leaf.at[i].set(v),
+                                  tree, value)
+
+
+def _gated_step(step_fn, axis=None):
+    """Wrap the engine's one-iteration kernel with per-session budget /
+    early-stop gating: inactive sessions (converged, or budget spent)
+    keep their state bit-for-bit and their absolute t frozen, so a
+    session that early-stops inside a fleet ends in exactly the state a
+    solo `vb_run` of the same length would have produced.  A FREE slot
+    is simply a session with `conv=True, budget=0` — the same gate is
+    the driver's active mask.  Under the mesh executor (`axis`) the
+    early-stop delta is pmean-reduced so every shard takes the identical
+    stop decision."""
+
+    def one(data, phi, carry, st, t, conv, budget, tol, delta_prev):
+        active = jnp.logical_and(~conv, t < budget)
+        phi2, carry2, st2, _ = step_fn(data, phi, carry, st, t)
+        msq = jnp.mean((phi2 - phi) ** 2)
+        if axis is not None:
+            msq = jax.lax.pmean(msq, axis)
+        delta = jnp.sqrt(msq).astype(phi.dtype)
+        conv2 = jnp.logical_or(conv,
+                               jnp.logical_and(tol > 0.0, delta < tol))
+        gate = lambda new, old: jax.tree_util.tree_map(
+            lambda a, b: jnp.where(active, a, b), new, old)
+        return (jnp.where(active, phi2, phi),
+                gate(carry2, carry),
+                gate(st2, st),
+                t + active.astype(t.dtype),
+                jnp.where(active, conv2, conv),
+                jnp.where(active, delta, delta_prev))
+
+    return one
+
+
+def _slice_scan(one, k):
+    """k gated iterations over the vmapped fleet as one lax.scan."""
+
+    def slice_fn(data, phi, carry, st, t, conv, budget, tol, delta):
+        def body(c, _):
+            phi, carry, st, t, conv, delta = c
+            return jax.vmap(one)(data, phi, carry, st, t, conv, budget,
+                                 tol, delta), None
+
+        init = (phi, carry, st, t, conv, delta)
+        (phi, carry, st, t, conv, delta), _ = jax.lax.scan(
+            body, init, None, length=k)
+        return phi, carry, st, t, conv, delta
+
+    return slice_fn
+
+
+# ---------------------------------------------------------------------------
+# FleetGroup: one fixed-capacity fleet of same-shape sessions
+# ---------------------------------------------------------------------------
+class FleetGroup:
+    """One fleet: same-shape sessions batched along a leading slot axis
+    of FIXED capacity.  Free slots hold an inert copy of the template
+    state (conv latched, zero budget), so join/leave are `.at[slot]`
+    writes and the compiled slice function never retraces mid-flight.
+    `max_fleet=None` falls back to power-of-two auto-growth (capacity
+    doubles when full — the shape-bucketing groundwork for ROADMAP
+    item 1's bucketed admission)."""
+
+    def __init__(self, session: engine.VBSession, executor,
+                 max_fleet: Optional[int] = None):
+        self.session = session          # template (data ignored per-slot)
+        self.executor = executor
+        self.max_fleet = max_fleet
+        self.slots: Optional[SlotTable] = None
+        self.data = None                # (capacity, ...) pytrees
+        self.phi = self.carry = self.stream = None
+        self.t = self.conv = self.budget = self.tol = self.delta = None
+        # host mirrors of the per-slot flag vectors (refreshed by
+        # fetch_flags after each slice; mutated in step with control ops)
+        self.host_t = self.host_conv = None
+        self.host_budget = self.host_delta = None
+        self._compiled = {}             # k -> compiled slice fn
+        self._retired_compiles = 0
+
+    @property
+    def capacity(self) -> int:
+        return 0 if self.slots is None else self.slots.capacity
+
+    # -- allocation -------------------------------------------------------
+    def _alloc(self, record: dict) -> None:
+        cap = 1 if self.max_fleet is None else int(self.max_fleet)
+        bcast = lambda leaf: jnp.broadcast_to(leaf[None], (cap,) + leaf.shape)
+        self.data = jax.tree_util.tree_map(bcast, record["data"])
+        self.phi = bcast(record["phi"])
+        self.carry = jax.tree_util.tree_map(bcast, record["carry"])
+        self.stream = jax.tree_util.tree_map(bcast, record["stream"])
+        self.t = bcast(record["t"])
+        self.conv = jnp.ones((cap,), bool)          # free slots: inert
+        self.budget = jnp.zeros((cap,), record["t"].dtype)
+        dt = record["phi"].dtype
+        self.tol = jnp.zeros((cap,), dt)
+        self.delta = jnp.zeros((cap,), dt)
+        self.host_t = np.zeros((cap,), np.int64)
+        self.host_conv = np.ones((cap,), bool)
+        self.host_budget = np.zeros((cap,), np.int64)
+        self.host_delta = np.zeros((cap,), np.float64)
+        self.slots = SlotTable(cap)
+
+    def _grow(self) -> None:
+        old = self.capacity
+        new = old * 2
+        pad = lambda leaf: jnp.concatenate(
+            [leaf, jnp.broadcast_to(leaf[:1], (new - old,) + leaf.shape[1:])])
+        self.data = jax.tree_util.tree_map(pad, self.data)
+        self.phi = pad(self.phi)
+        self.carry = jax.tree_util.tree_map(pad, self.carry)
+        self.stream = jax.tree_util.tree_map(pad, self.stream)
+        self.t = pad(self.t)
+        self.conv = jnp.concatenate(
+            [self.conv, jnp.ones((new - old,), bool)])
+        self.budget = jnp.concatenate(
+            [self.budget, jnp.zeros((new - old,), self.budget.dtype)])
+        self.tol = jnp.concatenate(
+            [self.tol, jnp.zeros((new - old,), self.tol.dtype)])
+        self.delta = jnp.concatenate(
+            [self.delta, jnp.zeros((new - old,), self.delta.dtype)])
+        self.host_t = np.concatenate(
+            [self.host_t, np.zeros((new - old,), np.int64)])
+        self.host_conv = np.concatenate(
+            [self.host_conv, np.ones((new - old,), bool)])
+        self.host_budget = np.concatenate(
+            [self.host_budget, np.zeros((new - old,), np.int64)])
+        self.host_delta = np.concatenate(
+            [self.host_delta, np.zeros((new - old,), np.float64)])
+        self.slots.grow(new)
+        self._clear_compiled()          # capacity is a new shape bucket
+
+    # -- join / leave -----------------------------------------------------
+    def admit(self, rid: str, record: dict) -> Optional[int]:
+        """Place one session record into a free slot; None if the fleet
+        is full (fixed capacity) — the caller keeps it queued."""
+        if self.slots is None:
+            self._alloc(record)
+        slot = self.slots.alloc(rid)
+        if slot is None:
+            if self.max_fleet is not None:
+                return None
+            self._grow()
+            slot = self.slots.alloc(rid)
+        self.load_state_tree(slot, record)
+        self.host_t[slot] = int(record["t"])
+        self.host_conv[slot] = bool(np.asarray(record["conv"]))
+        self.host_budget[slot] = int(record["budget"])
+        self.host_delta[slot] = float(record["delta"])
+        return slot
+
+    def evict(self, slot: int) -> dict:
+        """Snapshot a slot's resumable state and mark the slot free
+        (inert: conv latched, zero budget)."""
+        record = self.state_tree(slot)
+        self.conv = self.conv.at[slot].set(True)
+        self.budget = self.budget.at[slot].set(0)
+        self.host_conv[slot] = True
+        self.host_budget[slot] = 0
+        self.slots.free(slot)
+        return record
+
+    # -- slice execution --------------------------------------------------
+    def _slice_fn(self, k: int):
+        if k not in self._compiled:
+            if self.executor is None:
+                one = _gated_step(engine.session_step_fn(self.session))
+                self._compiled[k] = jax.jit(_slice_scan(one, k))
+            else:
+                self._compiled[k] = self._mesh_slice_fn(k)
+        return self._compiled[k]
+
+    def _mesh_slice_fn(self, k: int):
+        """MeshExecutor composition: shard_map over the NODE axis with
+        the fleet vmap inside — the fleet axis is a plain leading batch
+        axis on every shard, the topology collectives run over the mesh
+        axis exactly as in `engine._run_vb_sharded`."""
+        from jax.sharding import PartitionSpec as P
+
+        from repro.dist import compat, sharding
+
+        mesh, axis = self.executor.mesh, self.executor.axis
+        ses = self.session
+        topology = ses.topology
+        local_inputs = topology.shard_inputs()
+        local_keys = tuple(sorted(local_inputs))
+
+        # ONE partitioning rule: take the engine executor's state specs
+        # (dist/sharding.vb_node_specs) and shift every state slot one
+        # axis right for the leading fleet dimension; the topology's
+        # shard_inputs rows are fleet-shared and keep their specs.
+        has_carry = self.carry is not None
+        has_stream = self.stream is not None
+        base_in, _ = sharding.vb_node_specs(
+            self.data, axis=axis, has_carry=has_carry,
+            n_local=len(local_keys),
+            carry_specs=topology.carry_specs(axis) if has_carry else None,
+            stream_specs=(stream_lib.StreamState(
+                keys=P(axis), perm=P(axis), epoch=P())
+                if has_stream else None))
+        data_b, phi_b, carry_b, stream_b = base_in[:4]
+        local_specs = base_in[4:]
+
+        def fleet(spec):                # unbatched spec -> fleet spec
+            return jax.tree_util.tree_map(
+                lambda s: P(*((None,) + tuple(s))), spec,
+                is_leaf=lambda s: isinstance(s, P))
+
+        data_specs = fleet(data_b)
+        phi_spec = fleet(phi_b)
+        carry_spec = fleet(carry_b) if has_carry else carry_b
+        stream_spec = fleet(stream_b) if has_stream else stream_b
+        rep = P()                       # per-session scalars: replicated
+        in_specs = (data_specs, phi_spec, carry_spec, stream_spec,
+                    rep, rep, rep, rep, rep) + local_specs
+        out_specs = (phi_spec, carry_spec, stream_spec, rep, rep, rep)
+
+        def run(data_l, phi_l, carry_l, st_l, t, conv, budget, tol, delta,
+                *local_vals):
+            local = dict(zip(local_keys, local_vals))
+            one = _gated_step(
+                engine.session_step_fn(ses, axis=axis, local=local),
+                axis=axis)
+            return _slice_scan(one, k)(data_l, phi_l, carry_l, st_l, t,
+                                       conv, budget, tol, delta)
+
+        fn = compat.shard_map(run, mesh=mesh, in_specs=in_specs,
+                              out_specs=out_specs, check_vma=False)
+
+        def call(data, phi, carry, st, t, conv, budget, tol, delta):
+            return fn(data, phi, carry, st, t, conv, budget, tol, delta,
+                      *(local_inputs[kk] for kk in local_keys))
+
+        return call
+
+    def step_slice(self, k: int) -> None:
+        """Dispatch one k-iteration slice (async: returns immediately
+        with futures; host work may overlap until fetch_flags syncs)."""
+        out = self._slice_fn(k)(self.data, self.phi, self.carry,
+                                self.stream, self.t, self.conv,
+                                self.budget, self.tol, self.delta)
+        (self.phi, self.carry, self.stream, self.t, self.conv,
+         self.delta) = out
+
+    def fetch_flags(self) -> None:
+        """Sync the small per-slot flag vectors device -> host."""
+        t, conv, delta = jax.device_get((self.t, self.conv, self.delta))
+        self.host_t = np.asarray(t).astype(np.int64)
+        self.host_conv = np.asarray(conv).astype(bool)
+        self.host_delta = np.asarray(delta).astype(np.float64)
+
+    # -- host-side views --------------------------------------------------
+    def done_mask(self) -> np.ndarray:
+        return self.host_conv | (self.host_t >= self.host_budget)
+
+    def active_count(self) -> int:
+        if self.slots is None:
+            return 0
+        done = self.done_mask()
+        return sum(1 for i, _ in self.slots.occupied() if not done[i])
+
+    @property
+    def compiles(self) -> int:
+        """Cumulative slice-fn traces, surviving cache clears.  jit
+        exposes its trace count via `_cache_size`; the mesh closure
+        counts as one trace per (k, capacity)."""
+        live = 0
+        for fn in self._compiled.values():
+            cs = getattr(fn, "_cache_size", None)
+            live += int(cs()) if callable(cs) else 1
+        return self._retired_compiles + live
+
+    def _clear_compiled(self) -> None:
+        self._retired_compiles = self.compiles
+        self._compiled.clear()
+
+    def state_tree(self, i: int) -> dict:
+        """One session's full resumable state (checkpoint payload)."""
+        return dict(phi=self.phi[i], t=self.t[i],
+                    carry=_tree_index(self.carry, i),
+                    stream=_tree_index(self.stream, i),
+                    conv=self.conv[i], budget=self.budget[i],
+                    tol=self.tol[i], delta=self.delta[i],
+                    data=_tree_index(self.data, i))
+
+    def load_state_tree(self, i: int, tree: dict) -> None:
+        self.phi = self.phi.at[i].set(tree["phi"])
+        self.t = self.t.at[i].set(tree["t"])
+        self.carry = _tree_set(self.carry, i, tree["carry"])
+        self.stream = _tree_set(self.stream, i, tree["stream"])
+        self.conv = self.conv.at[i].set(tree["conv"])
+        self.budget = self.budget.at[i].set(tree["budget"])
+        self.tol = self.tol.at[i].set(tree["tol"])
+        self.delta = self.delta.at[i].set(tree["delta"])
+        self.data = _tree_set(self.data, i, tree["data"])
+
+
+class SessionStatus(NamedTuple):
+    """Host-side snapshot of one session (admitted, queued or evicted)."""
+
+    rid: str
+    t: int                  # absolute iterations actually applied
+    budget: int
+    converged: bool         # early-stop latch (tol reached)
+    done: bool              # converged or budget exhausted
+    delta: float            # last applied step's rms phi change
+    phi: Any                # (N, P) current natural parameters
+    queued: bool = False    # waiting for arrival time or a free slot
+    evicted: bool = False   # finished and removed from its fleet slot
+    latency_s: float = 0.0  # submit -> finished wall time (0 while open)
+
+
+# ---------------------------------------------------------------------------
+# VBDriver: the continuous-batching scheduler
+# ---------------------------------------------------------------------------
+class VBDriver:
+    """Continuous-batching scheduler for VB sessions.
+
+    slice_iters : device iterations per slice — the scheduling quantum.
+    max_fleet : fixed slot capacity per fleet group (arrivals beyond it
+        queue until an eviction frees a slot); None = power-of-two
+        auto-growth, the drop-in behaviour `VBService` defaults to.
+    executor : optional `engine.MeshExecutor` (node axis sharded, fleet
+        vmap inside the shard_map body).
+    ckpt_dir / ckpt_every : when set, every `ckpt_every` slices each
+        occupied slot's boundary state is handed to the background
+        `CheckpointWriter` as `<ckpt_dir>/<rid>.npz`.
+
+    Drive it synchronously (`tick()` / `drain()`) or start the
+    background scheduler thread (`start()`), then `submit` / `push_data`
+    / `extend_budget` from any thread; control ops apply at slice
+    boundaries (the driver lock serializes them with the device loop).
+    """
+
+    def __init__(self, *, slice_iters: int = 25,
+                 max_fleet: Optional[int] = None,
+                 executor: Optional[engine.MeshExecutor] = None,
+                 ckpt_dir: Optional[str] = None, ckpt_every: int = 0):
+        if slice_iters < 1:
+            raise ValueError(f"slice_iters must be >= 1: {slice_iters}")
+        if max_fleet is not None and max_fleet < 1:
+            raise ValueError(f"max_fleet must be >= 1: {max_fleet}")
+        self.slice_iters = slice_iters
+        self.max_fleet = max_fleet
+        self.executor = executor
+        self.ckpt_dir = ckpt_dir
+        self.ckpt_every = ckpt_every
+        self._groups: dict[tuple, FleetGroup] = {}
+        self._where: dict[str, tuple[tuple, int]] = {}  # rid -> (key, slot)
+        self._queue = ArrivalQueue()
+        self._queued: dict[str, dict] = {}              # rid -> entry
+        self._finished: dict[str, dict] = {}            # rid -> fin record
+        self._meta: dict[str, dict] = {}
+        self._order: list[str] = []
+        self._counter = 0
+        self._clock = 0                 # slice-boundary clock (arrive_at)
+        self._slices = 0
+        self._n_admitted = 0
+        self._n_evicted = 0
+        self._occ_active = 0            # sum of active counts over slices
+        self._occ_slots = 0             # sum of capacities over slices
+        self._writer = CheckpointWriter()
+        self._lock = threading.RLock()
+        self._wake = threading.Event()
+        self._stop_evt = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+
+    # -- admission --------------------------------------------------------
+    def _group_key(self, req) -> tuple:
+        # structural signatures (arrays by identity), so tenants built as
+        # `Diffusion(W)` per request still share one fleet as long as
+        # they share the weight matrix / adjacency / prior arrays
+        return (admission.static_signature(req.model),
+                admission.static_signature(req.topology),
+                admission.shape_signature(req.data), req.schedule,
+                req.replication, req.minibatch)
+
+    def submit(self, req, *, arrive_at: Optional[int] = None,
+               restore_from: Optional[str] = None) -> str:
+        """Queue one session (any object with the `VBRequest` fields);
+        returns its id.  `arrive_at` defers admission until that slice
+        boundary; `restore_from` loads a `save_session` checkpoint into
+        the fresh record (the request must describe the same shapes),
+        resuming it bit-exactly."""
+        if req.n_iters < 1:
+            raise ValueError(f"n_iters must be >= 1: {req.n_iters}")
+        state = engine.vb_init(
+            req.model, req.data, req.topology, schedule=req.schedule,
+            replication=req.replication, init_phi=req.init_phi,
+            minibatch=req.minibatch, diagnostics=False)
+        dt = state.phi.dtype
+        record = dict(phi=state.phi, t=state.t, carry=state.carry,
+                      stream=state.stream, conv=jnp.zeros((), bool),
+                      budget=jnp.asarray(req.n_iters, state.t.dtype),
+                      tol=jnp.asarray(req.tol, dt),
+                      delta=jnp.zeros((), dt), data=state.session.data)
+        if restore_from is not None:
+            record = ckpt.restore(restore_from, record)
+        key = self._group_key(req)
+        with self._lock:
+            rid = f"s{self._counter:04d}"
+            self._counter += 1
+            self._order.append(rid)
+            at = self._clock if arrive_at is None else int(arrive_at)
+            self._meta[rid] = dict(submitted=time.monotonic(),
+                                   finished=None, arrive_at=at)
+            entry = dict(rid=rid, key=key, session=state.session,
+                         record=record)
+            self._queued[rid] = entry
+            self._queue.push(entry, at)
+            self._try_admit()
+        self._wake.set()
+        return rid
+
+    def _try_admit(self) -> None:
+        """Admit every ready arrival that a fleet slot can take (lock
+        held).  Fleet-full entries go back on the queue in FIFO order."""
+        for at, seq, entry in self._queue.pop_ready(self._clock):
+            rid, rec = entry["rid"], entry["record"]
+            if bool(np.asarray(rec["conv"])) \
+                    or int(rec["t"]) >= int(rec["budget"]):
+                # e.g. restored from a finished checkpoint: nothing to run
+                self._queued.pop(rid, None)
+                self._retire(rid, dict(record=rec, key=entry["key"],
+                                       session=entry["session"]))
+                continue
+            group = self._groups.get(entry["key"])
+            if group is None:
+                group = FleetGroup(entry["session"], self.executor,
+                                   max_fleet=self.max_fleet)
+                self._groups[entry["key"]] = group
+            slot = group.admit(rid, rec)
+            if slot is None:
+                self._queue.push_entry((at, seq, entry))
+                continue
+            self._queued.pop(rid, None)
+            self._where[rid] = (entry["key"], slot)
+            self._n_admitted += 1
+
+    def _retire(self, rid: str, fin: dict) -> None:
+        self._finished[rid] = fin
+        if self._meta[rid]["finished"] is None:
+            self._meta[rid]["finished"] = time.monotonic()
+
+    # -- the scheduling loop ----------------------------------------------
+    def tick(self) -> int:
+        """One slice boundary: admit ready arrivals, dispatch one slice
+        per fleet with active work, overlap host-side checkpoint
+        snapshots with the device slice, then sync flags, evict finished
+        sessions and advance the clock.  Returns #sessions still open."""
+        with self._lock:
+            self._try_admit()
+            stepped = [g for g in self._groups.values()
+                       if g.active_count() > 0]
+            snaps = []
+            if self.ckpt_dir and self.ckpt_every and stepped \
+                    and (self._slices + 1) % self.ckpt_every == 0:
+                for g in stepped:       # boundary state, pre-dispatch refs
+                    snaps.extend((rid, g.state_tree(slot))
+                                 for slot, rid in g.slots.occupied())
+            for g in stepped:
+                self._occ_active += g.active_count()
+                self._occ_slots += g.capacity
+                g.step_slice(self.slice_iters)      # async dispatch
+            if stepped:
+                self._slices += 1
+            for rid, tree in snaps:     # writer overlaps the device slice
+                self._writer.submit(
+                    tree, os.path.join(self.ckpt_dir, f"{rid}.npz"))
+            for g in stepped:
+                g.fetch_flags()                     # device -> host sync
+            self._evict_done()
+            self._clock += 1
+            return self._remaining_locked()
+
+    def _evict_done(self) -> None:
+        for key, group in self._groups.items():
+            if group.slots is None:
+                continue
+            done = group.done_mask()
+            for slot, rid in group.slots.occupied():
+                if done[slot]:
+                    record = group.evict(slot)
+                    del self._where[rid]
+                    self._n_evicted += 1
+                    self._retire(rid, dict(record=record, key=key,
+                                           session=group.session))
+
+    def _remaining_locked(self) -> int:
+        return (sum(g.active_count() for g in self._groups.values())
+                + len(self._queued))
+
+    def remaining(self) -> int:
+        with self._lock:
+            return self._remaining_locked()
+
+    def drain(self, max_slices: Optional[int] = None,
+              poll: float = 0.002) -> int:
+        """Run until no session is open (or `max_slices` dispatched).
+        With the background thread running this just waits; otherwise it
+        pumps `tick()` inline.  Returns #sessions still open."""
+        if self._thread is not None and self._thread.is_alive():
+            while self.remaining() > 0:
+                time.sleep(poll)
+            self._writer.flush()
+            return 0
+        n = 0
+        left = self.tick()
+        while left > 0:
+            n += 1
+            if max_slices is not None and n >= max_slices:
+                break
+            left = self.tick()
+        self._writer.flush()
+        return left
+
+    def start(self) -> None:
+        """Start the background scheduler thread (idempotent)."""
+        with self._lock:
+            if self._thread is not None and self._thread.is_alive():
+                return
+            self._stop_evt.clear()
+            self._thread = threading.Thread(target=self._loop, daemon=True)
+            self._thread.start()
+
+    def _loop(self) -> None:
+        while not self._stop_evt.is_set():
+            if self.tick() == 0:
+                self._wake.clear()
+                self._wake.wait(timeout=0.02)
+
+    def stop(self) -> None:
+        self._stop_evt.set()
+        self._wake.set()
+        if self._thread is not None:
+            self._thread.join(timeout=10.0)
+            self._thread = None
+
+    # -- observation ------------------------------------------------------
+    def status(self, rid: str) -> SessionStatus:
+        with self._lock:
+            meta = self._meta.get(rid)
+            if meta is None:
+                raise KeyError(f"unknown session {rid!r}")
+            lat = ((meta["finished"] - meta["submitted"])
+                   if meta["finished"] is not None else 0.0)
+            if rid in self._where:
+                key, i = self._where[rid]
+                g = self._groups[key]
+                t, budget = int(g.host_t[i]), int(g.host_budget[i])
+                conv = bool(g.host_conv[i])
+                return SessionStatus(
+                    rid=rid, t=t, budget=budget, converged=conv,
+                    done=conv or t >= budget, delta=float(g.host_delta[i]),
+                    phi=g.phi[i], latency_s=lat)
+            rec = (self._finished[rid]["record"] if rid in self._finished
+                   else self._queued[rid]["record"])
+            t, budget = int(rec["t"]), int(rec["budget"])
+            conv = bool(np.asarray(rec["conv"]))
+            return SessionStatus(
+                rid=rid, t=t, budget=budget, converged=conv,
+                done=conv or t >= budget, delta=float(rec["delta"]),
+                phi=rec["phi"], queued=rid in self._queued,
+                evicted=rid in self._finished, latency_s=lat)
+
+    @property
+    def sessions(self) -> list[str]:
+        with self._lock:
+            return list(self._order)
+
+    def stats(self) -> DriverStats:
+        with self._lock:
+            active = sum(g.active_count() for g in self._groups.values())
+            capacity = sum(g.capacity for g in self._groups.values())
+            compiles = sum(g.compiles for g in self._groups.values())
+            occ = (self._occ_active / self._occ_slots
+                   if self._occ_slots else 0.0)
+            return DriverStats(
+                slices=self._slices, compiles=compiles,
+                admitted=self._n_admitted, evicted=self._n_evicted,
+                queue_depth=len(self._queued), active=active,
+                capacity=capacity, occupancy=occ,
+                padding_waste=(1.0 - occ) if self._occ_slots else 0.0,
+                checkpoints=self._writer.completed)
+
+    # -- mid-flight control ops (apply at slice boundaries) ---------------
+    def push_data(self, rid: str, node: int, points: Any) -> None:
+        """Append freshly-arrived observations to one node's buffer
+        (into padding slots — `model.append_node_data`) and un-latch the
+        session's convergence flag.  An EVICTED session whose budget
+        still has room goes back through the arrival queue and resumes
+        in any free slot (bit-exact, absolute-t contract)."""
+        with self._lock:
+            if rid in self._where:
+                key, i = self._where[rid]
+                g = self._groups[key]
+                data_i = _tree_index(g.data, i)
+                new = g.session.model.append_node_data(data_i, node, points)
+                g.data = _tree_set(g.data, i, new)
+                g.conv = g.conv.at[i].set(False)
+                g.host_conv[i] = False
+            elif rid in self._finished or rid in self._queued:
+                fin = (self._finished.get(rid) or self._queued[rid])
+                rec = fin["record"]
+                rec["data"] = fin["session"].model.append_node_data(
+                    rec["data"], node, points)
+                rec["conv"] = jnp.zeros((), bool)
+                if rid in self._finished:
+                    self._maybe_requeue(rid)
+            else:
+                raise KeyError(f"unknown session {rid!r}")
+        self._wake.set()
+
+    def replace_data(self, rid: str, data: Any) -> None:
+        """Replace a session's data buffers wholesale (same shapes)."""
+        with self._lock:
+            cur = self._current_data(rid)
+            sig_new = admission.shape_signature(data)
+            sig_old = admission.shape_signature(cur)
+            if sig_new != sig_old:
+                raise ValueError(
+                    f"replace_data: shape signature mismatch "
+                    f"({sig_new} != {sig_old})")
+            if rid in self._where:
+                key, i = self._where[rid]
+                g = self._groups[key]
+                g.data = _tree_set(g.data, i, data)
+                g.conv = g.conv.at[i].set(False)
+                g.host_conv[i] = False
+            else:
+                fin = (self._finished.get(rid) or self._queued[rid])
+                fin["record"]["data"] = jax.tree_util.tree_map(
+                    jnp.asarray, data)
+                fin["record"]["conv"] = jnp.zeros((), bool)
+                if rid in self._finished:
+                    self._maybe_requeue(rid)
+        self._wake.set()
+
+    def _current_data(self, rid: str):
+        if rid in self._where:
+            key, i = self._where[rid]
+            return _tree_index(self._groups[key].data, i)
+        if rid in self._finished:
+            return self._finished[rid]["record"]["data"]
+        if rid in self._queued:
+            return self._queued[rid]["record"]["data"]
+        raise KeyError(f"unknown session {rid!r}")
+
+    def extend_budget(self, rid: str, extra_iters: int) -> None:
+        with self._lock:
+            if rid in self._where:
+                key, i = self._where[rid]
+                g = self._groups[key]
+                g.budget = g.budget.at[i].add(extra_iters)
+                g.conv = g.conv.at[i].set(False)
+                g.host_budget[i] += extra_iters
+                g.host_conv[i] = False
+            elif rid in self._finished or rid in self._queued:
+                fin = (self._finished.get(rid) or self._queued[rid])
+                rec = fin["record"]
+                rec["budget"] = rec["budget"] + jnp.asarray(
+                    extra_iters, rec["budget"].dtype)
+                rec["conv"] = jnp.zeros((), bool)
+                if rid in self._finished:
+                    self._maybe_requeue(rid)
+            else:
+                raise KeyError(f"unknown session {rid!r}")
+        self._wake.set()
+
+    def _maybe_requeue(self, rid: str) -> None:
+        """Re-queue an evicted session that has work again (new data or
+        extended budget); absolute-t resumability makes re-admission
+        into any free slot bit-safe."""
+        fin = self._finished[rid]
+        rec = fin["record"]
+        if bool(np.asarray(rec["conv"])) \
+                or int(rec["t"]) >= int(rec["budget"]):
+            return
+        del self._finished[rid]
+        self._meta[rid]["finished"] = None
+        entry = dict(rid=rid, key=fin["key"], session=fin["session"],
+                     record=rec)
+        self._queued[rid] = entry
+        self._queue.push(entry, self._clock)
+        self._try_admit()
+
+    # -- checkpointing ----------------------------------------------------
+    def save_session(self, rid: str, path: str, *, wait: bool = True) -> str:
+        """Write one session's full resumable state (incl. data buffers
+        and budget bookkeeping) as a `checkpoint/ckpt.py` .npz.  With
+        `wait=False` the device→host transfer and compression happen on
+        the background writer thread (call `flush_checkpoints` or rely
+        on `drain` before reading the file)."""
+        with self._lock:
+            if rid in self._where:
+                key, i = self._where[rid]
+                tree = self._groups[key].state_tree(i)
+            elif rid in self._finished:
+                tree = dict(self._finished[rid]["record"])
+            elif rid in self._queued:
+                tree = dict(self._queued[rid]["record"])
+            else:
+                raise KeyError(f"unknown session {rid!r}")
+        pending = self._writer.submit(tree, path)
+        return pending.wait() if wait else path
+
+    def flush_checkpoints(self) -> None:
+        self._writer.flush()

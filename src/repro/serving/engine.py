@@ -20,6 +20,7 @@ from repro.configs.base import ModelConfig
 from repro.dist import compat, sharding  # noqa: F401  (sharding: policy API)
 from repro.models import model as model_lib
 from repro.serving import admission
+from repro.serving.driver import ArrivalQueue, DriverStats, SlotTable
 
 
 # ---------------------------------------------------------------------------
@@ -86,18 +87,59 @@ class Request(NamedTuple):
 
 
 class Engine:
+    """Host-side LM driver, scheduled with the same primitives as the VB
+    continuous-batching driver (`serving/driver.py`): requests go through
+    an `ArrivalQueue` into `SlotTable` waves of at most `max_batch`
+    slots, the decode loop keeps a per-slot ACTIVE mask (a request that
+    has all its tokens is idle-masked while its wave-mates keep
+    decoding), and `stats()` reports the same `DriverStats` counters —
+    compiles, occupancy, padding waste — the VB driver reports.
+    `max_batch=None` admits every request in one wave."""
+
     def __init__(self, cfg: ModelConfig, mesh: Mesh, params, *,
-                 max_seq: int = 1024, use_kernels: bool = False, seed: int = 0):
+                 max_seq: int = 1024, use_kernels: bool = False,
+                 seed: int = 0, max_batch: Optional[int] = None):
         self.cfg, self.mesh, self.params = cfg, mesh, params
         self.max_seq = max_seq
+        self.max_batch = max_batch
         self.key = jax.random.PRNGKey(seed)
         self._prefill = jax.jit(make_prefill_step(cfg,
                                                   use_kernels=use_kernels))
         self._decode = jax.jit(make_decode_step(cfg))
+        self._steps = 0                 # decode steps dispatched
+        self._waves = 0
+        self._n_admitted = 0
+        self._occ_active = 0            # sum of active slots over steps
+        self._occ_slots = 0             # sum of wave widths over steps
 
     def generate(self, requests: list[Request], *,
                  temperature: float = 0.0) -> list[np.ndarray]:
-        """Batched greedy/temperature generation."""
+        """Batched greedy/temperature generation.  With `max_batch` set,
+        requests beyond the wave width wait in the arrival queue and run
+        as follow-up waves once a wave's slots drain."""
+        queue = ArrivalQueue()
+        for i in range(len(requests)):
+            queue.push(i)
+        results: list[Optional[np.ndarray]] = [None] * len(requests)
+        while len(queue):
+            table = SlotTable(self.max_batch if self.max_batch is not None
+                              else max(len(queue), 1))
+            wave = []
+            for entry in queue.pop_ready(0.0):
+                if table.alloc(f"r{entry[2]}") is None:
+                    queue.push_entry(entry)     # next wave
+                else:
+                    wave.append(entry[2])
+            outs = self._generate_wave([requests[i] for i in wave],
+                                       temperature)
+            for i, out in zip(wave, outs):
+                results[i] = out
+            self._waves += 1
+            self._n_admitted += len(wave)
+        return results
+
+    def _generate_wave(self, requests: list[Request],
+                       temperature: float) -> list[np.ndarray]:
         cfg = self.cfg
         B = len(requests)
         plen = max(max(len(r.prompt) for r in requests),
@@ -110,6 +152,9 @@ class Engine:
                                  jnp.float32)
         max_new = max(r.max_new_tokens for r in requests)
         total = min(self.max_seq, plen + max_new)
+        # per-slot active mask: slot i needs tokens until plen+max_new_i
+        need = np.array([min(self.max_seq, plen + r.max_new_tokens)
+                         for r in requests])
 
         with compat.use_mesh(self.mesh):
             logits, cache = self._prefill(self.params, jnp.asarray(toks),
@@ -120,6 +165,12 @@ class Engine:
             out = [toks]
             cur = _sample(logits, temperature, self._next_key())
             for t in range(plen, total):
+                active = int((need > t).sum())
+                if active == 0:         # every slot has its tokens
+                    break
+                self._steps += 1
+                self._occ_active += active
+                self._occ_slots += B
                 out.append(np.asarray(cur))
                 logits, cache = self._decode(self.params, cur, cache,
                                              jnp.int32(t))
@@ -131,6 +182,22 @@ class Engine:
     def _next_key(self):
         self.key, k = jax.random.split(self.key)
         return k
+
+    def stats(self) -> DriverStats:
+        """The VB driver's counters, LM flavour: slices = decode steps,
+        occupancy = time-averaged active/width over decode steps."""
+        cache_size = lambda fn: (int(fn._cache_size())
+                                 if hasattr(fn, "_cache_size") else 0)
+        occ = (self._occ_active / self._occ_slots
+               if self._occ_slots else 0.0)
+        return DriverStats(
+            slices=self._steps,
+            compiles=cache_size(self._prefill) + cache_size(self._decode),
+            admitted=self._n_admitted, evicted=self._n_admitted,
+            queue_depth=0, active=0,
+            capacity=self.max_batch or 0, occupancy=occ,
+            padding_waste=(1.0 - occ) if self._occ_slots else 0.0,
+            checkpoints=0)
 
 
 def _sample(logits, temperature, key):

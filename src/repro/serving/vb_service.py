@@ -3,57 +3,57 @@
 The LM serving engine (serving/engine.py) admits token requests, batches
 them, and steps the batch; this module gives the VB core the same shape.
 A `VBRequest` is one independent sensor network (dataset + topology +
-hyper + iteration budget); the `VBService`:
+hyper + iteration budget); the `VBService` is the stable public API over
+the continuous-batching scheduler in `serving/driver.py`:
 
 * **admits** requests into fleet groups keyed by
   `admission.shape_signature(data)` plus the static run configuration —
   sessions that share model/topology objects, data shapes and hyper run
   as ONE device batch;
-* **fleet-batches** each group along a leading session axis: the
-  engine's one-iteration kernel (`engine.session_step_fn`) is vmapped
-  over the fleet, so 16 networks cost one compiled step, not 16 — and
-  composes with `engine.MeshExecutor`, putting the vmap INSIDE a
-  shard_map body so the node axis is sharded while the fleet axis is
-  vectorised;
-* **steps in slices** (`slice_iters` iterations per `step_slice` call),
-  with per-session budgets and early stop: a session whose rms phi
-  change per iteration falls under its `tol` (or whose budget is
-  exhausted) freezes in place — its state stops evolving and its
-  absolute `t` stops counting — while its fleet-mates keep iterating;
+* **fleet-batches** each group along a leading slot axis: the engine's
+  one-iteration kernel (`engine.session_step_fn`) is vmapped over the
+  fleet, so 16 networks cost one compiled step, not 16 — and composes
+  with `engine.MeshExecutor`, putting the vmap INSIDE a shard_map body
+  so the node axis is sharded while the fleet axis is vectorised;
+* **schedules continuously** (`serving/driver.py`): sessions join and
+  leave their fleet mid-flight with zero recompilation (fixed-capacity
+  slots with `max_fleet`, power-of-two auto-growth otherwise), finished
+  sessions are EVICTED at slice boundaries so their slots go back to the
+  arrival queue, and `run` is a thin drive-to-drain wrapper over
+  `driver.tick()`; `start()`/`drain()`/`stop()` expose the background
+  scheduler thread for real-time arrival workloads;
 * supports **mid-flight data arrival** between slices — the streaming
   scenario the paper is written for: `push_data` appends new
   observations into a node's padding slots (`model.append_node_data`,
   fixed-capacity buffers so the compiled step survives) and
   `replace_data` swaps a session's buffers wholesale; both un-latch the
-  session's convergence flag;
+  session's convergence flag, re-queueing an already-evicted session;
 * **checkpoints** sessions via `checkpoint/ckpt.py`: `save_session`
   writes one session's full resumable state (phi, absolute t, topology
-  carry, stream state, budget/tol bookkeeping, data buffers) and
+  carry, stream state, budget/tol bookkeeping, data buffers) — on the
+  background `CheckpointWriter` thread with `wait=False` — and
   `submit(request, restore_from=path)` resumes it — bit-exact, because
   the engine keys every per-iteration source of randomness on the
   absolute t (see `engine.VBState`).
 
 Example::
 
-    svc = VBService(slice_iters=20)
+    svc = VBService(slice_iters=20, max_fleet=8)
     rid = svc.submit(VBRequest(model=mdl, data=(x, mask),
                                topology=engine.Diffusion(W),
                                n_iters=400, tol=1e-8))
     results = svc.run()            # drive every admitted session to done
     results[rid].phi               # (N, P) final natural parameters
+    svc.stats()                    # DriverStats: compiles/occupancy/...
 """
 from __future__ import annotations
 
 from typing import Any, NamedTuple, Optional
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.checkpoint import ckpt
 from repro.core import engine
 from repro.data import stream as stream_lib
-from repro.serving import admission
+from repro.serving.driver import (DriverStats, SessionStatus,  # noqa: F401
+                                  VBDriver)
 
 
 class VBRequest(NamedTuple):
@@ -77,379 +77,111 @@ class VBRequest(NamedTuple):
     tol: float = 0.0
 
 
-class SessionStatus(NamedTuple):
-    """Host-side snapshot of one admitted session."""
-
-    rid: str
-    t: int                  # absolute iterations actually applied
-    budget: int
-    converged: bool         # early-stop latch (tol reached)
-    done: bool              # converged or budget exhausted
-    delta: float            # last applied step's rms phi change
-    phi: Any                # (N, P) current natural parameters
-
-
-def _tree_stack(trees):
-    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *trees)
-
-
-def _tree_index(tree, i):
-    return jax.tree_util.tree_map(lambda leaf: leaf[i], tree)
-
-
-def _tree_set(tree, i, value):
-    return jax.tree_util.tree_map(lambda leaf, v: leaf.at[i].set(v),
-                                  tree, value)
-
-
-def _gated_step(step_fn, axis=None):
-    """Wrap the engine's one-iteration kernel with per-session budget /
-    early-stop gating: inactive sessions (converged, or budget spent)
-    keep their state bit-for-bit and their absolute t frozen, so a
-    session that early-stops inside a fleet ends in exactly the state a
-    solo `vb_run` of the same length would have produced.  Under the
-    mesh executor (`axis`) the early-stop delta is pmean-reduced so
-    every shard takes the identical stop decision."""
-
-    def one(data, phi, carry, st, t, conv, budget, tol, delta_prev):
-        active = jnp.logical_and(~conv, t < budget)
-        phi2, carry2, st2, _ = step_fn(data, phi, carry, st, t)
-        msq = jnp.mean((phi2 - phi) ** 2)
-        if axis is not None:
-            msq = jax.lax.pmean(msq, axis)
-        delta = jnp.sqrt(msq).astype(phi.dtype)
-        conv2 = jnp.logical_or(conv,
-                               jnp.logical_and(tol > 0.0, delta < tol))
-        gate = lambda new, old: jax.tree_util.tree_map(
-            lambda a, b: jnp.where(active, a, b), new, old)
-        return (jnp.where(active, phi2, phi),
-                gate(carry2, carry),
-                gate(st2, st),
-                t + active.astype(t.dtype),
-                jnp.where(active, conv2, conv),
-                jnp.where(active, delta, delta_prev))
-
-    return one
-
-
-def _slice_scan(one, k):
-    """k gated iterations over the vmapped fleet as one lax.scan."""
-
-    def slice_fn(data, phi, carry, st, t, conv, budget, tol, delta):
-        def body(c, _):
-            phi, carry, st, t, conv, delta = c
-            return jax.vmap(one)(data, phi, carry, st, t, conv, budget,
-                                 tol, delta), None
-
-        init = (phi, carry, st, t, conv, delta)
-        (phi, carry, st, t, conv, delta), _ = jax.lax.scan(
-            body, init, None, length=k)
-        return phi, carry, st, t, conv, delta
-
-    return slice_fn
-
-
-class _Group:
-    """One fleet: same-shape sessions batched along a leading axis."""
-
-    def __init__(self, session: engine.VBSession, executor):
-        self.session = session          # template (data ignored per-slot)
-        self.executor = executor
-        self.rids: list[str] = []
-        self.data = None                # stacked (B, ...) pytree
-        self.phi = self.carry = self.stream = None
-        self.t = self.conv = self.budget = self.tol = self.delta = None
-        self._compiled = {}             # (k, B) -> jitted slice fn
-
-    @property
-    def size(self) -> int:
-        return len(self.rids)
-
-    def add(self, rid: str, state: engine.VBState, budget: int, tol: float):
-        dt = state.phi.dtype
-        one_data = state.session.data
-        new = dict(
-            data=_tree_stack([one_data]), phi=_tree_stack([state.phi]),
-            carry=_tree_stack([state.carry]),
-            stream=_tree_stack([state.stream]),
-            t=state.t[None], conv=jnp.zeros((1,), bool),
-            budget=jnp.asarray([budget], state.t.dtype),
-            tol=jnp.asarray([tol], dt), delta=jnp.zeros((1,), dt))
-        if self.rids:
-            for name, val in new.items():
-                cur = getattr(self, name)
-                setattr(self, name, jax.tree_util.tree_map(
-                    lambda a, b: jnp.concatenate([a, b]), cur, val))
-            self._compiled.clear()      # fleet size changed -> recompile
-        else:
-            for name, val in new.items():
-                setattr(self, name, val)
-        self.rids.append(rid)
-
-    # -- slice execution --------------------------------------------------
-    def _slice_fn(self, k: int):
-        key = (k, self.size)
-        if key not in self._compiled:
-            if self.executor is None:
-                one = _gated_step(engine.session_step_fn(self.session))
-                self._compiled[key] = jax.jit(_slice_scan(one, k))
-            else:
-                self._compiled[key] = self._mesh_slice_fn(k)
-        return self._compiled[key]
-
-    def _mesh_slice_fn(self, k: int):
-        """MeshExecutor composition: shard_map over the NODE axis with
-        the fleet vmap inside — the fleet axis is a plain leading batch
-        axis on every shard, the topology collectives run over the mesh
-        axis exactly as in `engine._run_vb_sharded`."""
-        from jax.sharding import PartitionSpec as P
-
-        from repro.dist import compat, sharding
-
-        mesh, axis = self.executor.mesh, self.executor.axis
-        ses = self.session
-        topology = ses.topology
-        local_inputs = topology.shard_inputs()
-        local_keys = tuple(sorted(local_inputs))
-
-        # ONE partitioning rule: take the engine executor's state specs
-        # (dist/sharding.vb_node_specs) and shift every state slot one
-        # axis right for the leading fleet dimension; the topology's
-        # shard_inputs rows are fleet-shared and keep their specs.
-        has_carry = self.carry is not None
-        has_stream = self.stream is not None
-        base_in, _ = sharding.vb_node_specs(
-            self.data, axis=axis, has_carry=has_carry,
-            n_local=len(local_keys),
-            carry_specs=topology.carry_specs(axis) if has_carry else None,
-            stream_specs=(stream_lib.StreamState(
-                keys=P(axis), perm=P(axis), epoch=P())
-                if has_stream else None))
-        data_b, phi_b, carry_b, stream_b = base_in[:4]
-        local_specs = base_in[4:]
-
-        def fleet(spec):                # unbatched spec -> fleet spec
-            return jax.tree_util.tree_map(
-                lambda s: P(*((None,) + tuple(s))), spec,
-                is_leaf=lambda s: isinstance(s, P))
-
-        data_specs = fleet(data_b)
-        phi_spec = fleet(phi_b)
-        carry_spec = fleet(carry_b) if has_carry else carry_b
-        stream_spec = fleet(stream_b) if has_stream else stream_b
-        rep = P()                       # per-session scalars: replicated
-        in_specs = (data_specs, phi_spec, carry_spec, stream_spec,
-                    rep, rep, rep, rep, rep) + local_specs
-        out_specs = (phi_spec, carry_spec, stream_spec, rep, rep, rep)
-
-        def run(data_l, phi_l, carry_l, st_l, t, conv, budget, tol, delta,
-                *local_vals):
-            local = dict(zip(local_keys, local_vals))
-            one = _gated_step(
-                engine.session_step_fn(ses, axis=axis, local=local),
-                axis=axis)
-            return _slice_scan(one, k)(data_l, phi_l, carry_l, st_l, t,
-                                       conv, budget, tol, delta)
-
-        fn = compat.shard_map(run, mesh=mesh, in_specs=in_specs,
-                              out_specs=out_specs, check_vma=False)
-
-        def call(data, phi, carry, st, t, conv, budget, tol, delta):
-            return fn(data, phi, carry, st, t, conv, budget, tol, delta,
-                      *(local_inputs[kk] for kk in local_keys))
-
-        return call
-
-    def step_slice(self, k: int) -> None:
-        out = self._slice_fn(k)(self.data, self.phi, self.carry,
-                                self.stream, self.t, self.conv,
-                                self.budget, self.tol, self.delta)
-        (self.phi, self.carry, self.stream, self.t, self.conv,
-         self.delta) = out
-
-    # -- host-side views --------------------------------------------------
-    def done_mask(self) -> np.ndarray:
-        return np.asarray(self.conv) | (np.asarray(self.t)
-                                        >= np.asarray(self.budget))
-
-    def state_tree(self, i: int) -> dict:
-        """One session's full resumable state (checkpoint payload)."""
-        return dict(phi=self.phi[i], t=self.t[i],
-                    carry=_tree_index(self.carry, i),
-                    stream=_tree_index(self.stream, i),
-                    conv=self.conv[i], budget=self.budget[i],
-                    tol=self.tol[i], delta=self.delta[i],
-                    data=_tree_index(self.data, i))
-
-    def load_state_tree(self, i: int, tree: dict) -> None:
-        self.phi = self.phi.at[i].set(tree["phi"])
-        self.t = self.t.at[i].set(tree["t"])
-        self.carry = _tree_set(self.carry, i, tree["carry"])
-        self.stream = _tree_set(self.stream, i, tree["stream"])
-        self.conv = self.conv.at[i].set(tree["conv"])
-        self.budget = self.budget.at[i].set(tree["budget"])
-        self.tol = self.tol.at[i].set(tree["tol"])
-        self.delta = self.delta.at[i].set(tree["delta"])
-        self.data = _tree_set(self.data, i, tree["data"])
-
-
-def _static_sig(obj):
-    """Hashable structural signature of a model/topology configuration.
-
-    Two separately-constructed objects of the same type whose attributes
-    agree — with ARRAYS compared by identity, so `Diffusion(W)` built
-    twice over the same weight matrix signs equal — produce the same
-    signature and therefore share a fleet group.  Anything unrecognised
-    falls back to object identity (conservative: splits groups, never
-    wrongly merges them).
-    """
-    if isinstance(obj, (int, float, bool, str, bytes, type(None))):
-        return obj
-    if isinstance(obj, (jnp.ndarray, np.ndarray)):
-        return ("arr", id(obj))
-    if isinstance(obj, tuple):           # incl. NamedTuples (Schedule etc.)
-        return (type(obj).__name__,) + tuple(_static_sig(v) for v in obj)
-    if hasattr(obj, "__dict__") or hasattr(obj, "__slots__"):
-        names = (sorted(vars(obj)) if hasattr(obj, "__dict__")
-                 else sorted(n for n in obj.__slots__ if hasattr(obj, n)))
-        return (type(obj).__name__,) + tuple(
-            (n, _static_sig(getattr(obj, n))) for n in names)
-    try:
-        hash(obj)
-        return obj
-    except TypeError:
-        return ("id", id(obj))
-
-
 class VBService:
     """Admit, batch, step, stream into, and checkpoint VB sessions.
 
-    slice_iters : iterations per `step_slice` call — the scheduling
-        quantum: between slices the host may admit more sessions, push
-        freshly-arrived data, checkpoint, or inspect status.
+    slice_iters : iterations per slice — the scheduling quantum: between
+        slices the driver admits arrivals, evicts finished sessions,
+        applies pushed data, checkpoints, or answers status.
     executor : optional `engine.MeshExecutor` — shard every fleet's node
         axis over a mesh axis (the fleet vmap moves inside the
         shard_map body).
+    max_fleet : fixed fleet capacity (continuous batching: arrivals
+        beyond it queue until an eviction frees a slot, with zero
+        recompilation); None = power-of-two auto-growth.
+    ckpt_dir / ckpt_every : background-checkpoint every occupied slot
+        each `ckpt_every` slices into `<ckpt_dir>/<rid>.npz`.
     """
 
     def __init__(self, *, slice_iters: int = 25,
-                 executor: Optional[engine.MeshExecutor] = None):
-        if slice_iters < 1:
-            raise ValueError(f"slice_iters must be >= 1: {slice_iters}")
-        self.slice_iters = slice_iters
-        self.executor = executor
-        self._groups: dict[tuple, _Group] = {}
-        self._where: dict[str, tuple[tuple, int]] = {}  # rid -> (key, idx)
-        self._counter = 0
+                 executor: Optional[engine.MeshExecutor] = None,
+                 max_fleet: Optional[int] = None,
+                 ckpt_dir: Optional[str] = None, ckpt_every: int = 0):
+        self.driver = VBDriver(slice_iters=slice_iters, executor=executor,
+                               max_fleet=max_fleet, ckpt_dir=ckpt_dir,
+                               ckpt_every=ckpt_every)
+
+    @property
+    def slice_iters(self) -> int:
+        return self.driver.slice_iters
+
+    @property
+    def executor(self):
+        return self.driver.executor
+
+    @property
+    def _groups(self):
+        return self.driver._groups
 
     # -- admission --------------------------------------------------------
-    def _group_key(self, req: VBRequest) -> tuple:
-        # structural signatures (arrays by identity), so tenants built as
-        # `Diffusion(W)` per request still share one fleet as long as
-        # they share the weight matrix / adjacency / prior arrays
-        return (_static_sig(req.model), _static_sig(req.topology),
-                admission.shape_signature(req.data), req.schedule,
-                req.replication, req.minibatch)
-
-    def submit(self, req: VBRequest, *,
+    def submit(self, req: VBRequest, *, arrive_at: Optional[int] = None,
                restore_from: Optional[str] = None) -> str:
-        """Admit one session; returns its id.  `restore_from` loads a
+        """Admit one session; returns its id.  `arrive_at` defers
+        admission to that slice boundary; `restore_from` loads a
         `save_session` checkpoint into the fresh slot (the request must
         describe the same shapes), resuming it bit-exactly."""
-        if req.n_iters < 1:
-            raise ValueError(f"n_iters must be >= 1: {req.n_iters}")
-        state = engine.vb_init(
-            req.model, req.data, req.topology, schedule=req.schedule,
-            replication=req.replication, init_phi=req.init_phi,
-            minibatch=req.minibatch, diagnostics=False)
-        key = self._group_key(req)
-        group = self._groups.get(key)
-        if group is None:
-            group = _Group(state.session, self.executor)
-            self._groups[key] = group
-        rid = f"s{self._counter:04d}"
-        self._counter += 1
-        group.add(rid, state, req.n_iters, req.tol)
-        self._where[rid] = (key, group.size - 1)
-        if restore_from is not None:
-            idx = group.size - 1
-            restored = ckpt.restore(restore_from, group.state_tree(idx))
-            group.load_state_tree(idx, restored)
-        return rid
-
-    def _locate(self, rid: str) -> tuple[_Group, int]:
-        if rid not in self._where:
-            raise KeyError(f"unknown session {rid!r}")
-        key, idx = self._where[rid]
-        return self._groups[key], idx
+        return self.driver.submit(req, arrive_at=arrive_at,
+                                  restore_from=restore_from)
 
     # -- stepping ---------------------------------------------------------
     def step_slice(self) -> int:
-        """Advance every group with unfinished sessions by one slice;
-        returns the number of sessions still not done."""
-        for group in self._groups.values():
-            if not bool(group.done_mask().all()):
-                group.step_slice(self.slice_iters)
-        return int(sum((~g.done_mask()).sum()
-                       for g in self._groups.values()))
+        """Advance every group with active sessions by one slice (one
+        driver tick); returns the number of sessions still open."""
+        return self.driver.tick()
 
     def run(self, max_slices: Optional[int] = None):
-        """Drive every admitted session to done (or `max_slices`);
+        """Drive every submitted session to done (or `max_slices`);
         returns {rid: SessionStatus}."""
         n = 0
-        while self.step_slice() > 0:
+        while self.driver.tick() > 0:
             n += 1
             if max_slices is not None and n >= max_slices:
                 break
-        return {rid: self.status(rid) for rid in self._where}
+        self.driver.flush_checkpoints()
+        return {rid: self.status(rid) for rid in self.driver.sessions}
+
+    def start(self) -> None:
+        """Start the background scheduler: submissions and pushed data
+        are picked up at slice boundaries without a host driving loop."""
+        self.driver.start()
+
+    def drain(self) -> None:
+        """Block until every submitted session is done (background or
+        inline) and all background checkpoint writes landed."""
+        self.driver.drain()
+
+    def stop(self) -> None:
+        self.driver.stop()
 
     # -- observation ------------------------------------------------------
     def status(self, rid: str) -> SessionStatus:
-        group, i = self._locate(rid)
-        t = int(group.t[i])
-        budget = int(group.budget[i])
-        conv = bool(group.conv[i])
-        return SessionStatus(rid=rid, t=t, budget=budget, converged=conv,
-                             done=conv or t >= budget,
-                             delta=float(group.delta[i]),
-                             phi=group.phi[i])
+        return self.driver.status(rid)
+
+    def stats(self) -> DriverStats:
+        return self.driver.stats()
 
     @property
     def sessions(self) -> list[str]:
-        return list(self._where)
+        return self.driver.sessions
 
     # -- mid-flight data arrival -----------------------------------------
     def push_data(self, rid: str, node: int, points: Any) -> None:
         """Append freshly-arrived observations to one node's buffer
         (into padding slots — `model.append_node_data`) and un-latch the
         session's convergence flag so it keeps iterating on the new
-        evidence."""
-        group, i = self._locate(rid)
-        data_i = _tree_index(group.data, i)
-        new = group.session.model.append_node_data(data_i, node, points)
-        group.data = _tree_set(group.data, i, new)
-        group.conv = group.conv.at[i].set(False)
+        evidence; an evicted session re-enters the arrival queue."""
+        self.driver.push_data(rid, node, points)
 
     def replace_data(self, rid: str, data: Any) -> None:
         """Replace a session's data buffers wholesale (same shapes)."""
-        group, i = self._locate(rid)
-        sig_new = admission.shape_signature(data)
-        sig_old = admission.shape_signature(_tree_index(group.data, i))
-        if sig_new != sig_old:
-            raise ValueError(
-                f"replace_data: shape signature mismatch "
-                f"({sig_new} != {sig_old})")
-        group.data = _tree_set(group.data, i, data)
-        group.conv = group.conv.at[i].set(False)
+        self.driver.replace_data(rid, data)
 
     def extend_budget(self, rid: str, extra_iters: int) -> None:
-        group, i = self._locate(rid)
-        group.budget = group.budget.at[i].add(extra_iters)
-        group.conv = group.conv.at[i].set(False)
+        self.driver.extend_budget(rid, extra_iters)
 
     # -- checkpointing ----------------------------------------------------
-    def save_session(self, rid: str, path: str) -> str:
+    def save_session(self, rid: str, path: str, *, wait: bool = True) -> str:
         """Write one session's full resumable state (incl. data buffers
-        and budget bookkeeping) as a `checkpoint/ckpt.py` .npz."""
-        group, i = self._locate(rid)
-        return ckpt.save(path, group.state_tree(i))
+        and budget bookkeeping) as a `checkpoint/ckpt.py` .npz; with
+        `wait=False` the write happens on the background writer."""
+        return self.driver.save_session(rid, path, wait=wait)

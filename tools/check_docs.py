@@ -52,6 +52,7 @@ SYM_ALIASES = {
     "optim": "repro.optim",
     "ckpt": "repro.checkpoint.ckpt",
     "vb_service": "repro.serving.vb_service",
+    "driver": "repro.serving.driver",
     "admission": "repro.serving.admission",
     "GMMModel": "repro.core.model.GMMModel",
     "LinRegModel": "repro.core.model.LinRegModel",
@@ -148,6 +149,8 @@ def check_issue_files(issue_path: str) -> list[str]:
         text = f.read()
     for m in ISSUE_PATH.finditer(text):
         ref = m.group(1).split("::", 1)[0].rstrip("/")
+        # `path.py:107`-style line anchors reference the file
+        ref = re.sub(r":\d+(?:-\d+)?$", "", ref)
         if not os.path.exists(os.path.join(ROOT, ref)):
             problems.append(f"ISSUE.md references missing file: {ref}")
     return problems
