@@ -58,3 +58,12 @@ def save(name: str, payload: dict):
     os.makedirs(OUTDIR, exist_ok=True)
     with open(os.path.join(OUTDIR, name + ".json"), "w") as f:
         json.dump(payload, f, indent=1, default=float)
+
+
+def load(name: str) -> dict | None:
+    """Read back a prior `save` (cross-benchmark handoff), None if absent."""
+    path = os.path.join(OUTDIR, name + ".json")
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        return json.load(f)

@@ -56,6 +56,8 @@ def main() -> None:
                    vb_service_bench.run),
                   ("vb_driver", "vb_driver_poisson",
                    vb_service_bench.run_poisson),
+                  ("vb_mixed", "vb_service_mixed",
+                   vb_service_bench.run_mixed_fleet),
                   ("consensus_lm", "consensus_lm", consensus_bench.run),
                   ("consensus_vb", "consensus_vb", consensus_bench.vb_run),
                   ("roofline", "roofline", roofline.run)])

@@ -126,10 +126,18 @@ class Schedule(NamedTuple):
     d0: float = 1.0
     eta_fixed: Optional[float] = None
 
-    def eta(self, t: jnp.ndarray) -> jnp.ndarray:
+    def eta(self, t: jnp.ndarray, hyper=None) -> jnp.ndarray:
+        """eta_t.  `hyper` is the optional per-session lifted-hyper dict
+        the serving layer threads through the fleet axis (see
+        `hyper_names`): entries override the static `tau` / `d0` so
+        sessions differing only in schedule constants share a compiled
+        fleet.  None (every solo path) reproduces the static behaviour
+        exactly."""
         if self.eta_fixed is not None:
             return jnp.asarray(self.eta_fixed, t.dtype)
-        return eta_schedule(t + 1.0, self.tau, self.d0)
+        tau = self.tau if not hyper or "tau" not in hyper else hyper["tau"]
+        d0 = self.d0 if not hyper or "d0" not in hyper else hyper["d0"]
+        return eta_schedule(t + 1.0, tau, d0)
 
 
 ONE_SHOT = Schedule(eta_fixed=1.0)
@@ -317,8 +325,8 @@ class _CombineTopology:
         raise NotImplementedError
 
     def step(self, model, phi, carry, phi_star, t, schedule: Schedule, *,
-             axis=None, local=None):
-        eta = schedule.eta(t.astype(phi.dtype))
+             axis=None, local=None, hyper=None):
+        eta = schedule.eta(t.astype(phi.dtype), hyper)
         if schedule.eta_fixed == 1.0:
             varphi = phi_star                       # one-shot: jump to phi*
         else:
@@ -679,7 +687,14 @@ class ADMMConsensus:
         return jnp.sqrt(jnp.sum(sq) / (n * z.shape[1]))
 
     def step(self, model, phi, carry, phi_star, t, schedule: Schedule, *,
-             axis=None, local=None):
+             axis=None, local=None, hyper=None):
+        # `hyper` entries (serving fleet axis, see `hyper_names`) override
+        # the static penalty/ramp constants; None — every solo path —
+        # reproduces the static behaviour exactly.  Under adaptive_rho the
+        # penalty lives in the carry (init_carry seeds it from self.rho),
+        # so only xi is liftable there.
+        rho = self.rho if not hyper or "rho" not in hyper else hyper["rho"]
+        xi = self.xi if not hyper or "xi" not in hyper else hyper["xi"]
         adj_rows = self.adj if axis is None else local["adj"]
         if self.links.time_varying:
             # iteration-t adjacency: the consensus constraints (and hence
@@ -706,16 +721,16 @@ class ADMMConsensus:
             lam = carry
             # (38a) primal
             phi_hat = (phi_star - 2.0 * lam
-                       + self.rho * (deg[:, None] * phi + neigh_sum(phi)))
-            phi_hat = phi_hat / (1.0 + 2.0 * self.rho * deg)[:, None]
+                       + rho * (deg[:, None] * phi + neigh_sum(phi)))
+            phi_hat = phi_hat / (1.0 + 2.0 * rho * deg)[:, None]
             if self.project:
                 phi_new = jax.vmap(model.project_to_domain)(phi_hat)  # (38b)
             else:
                 phi_new = phi_hat
             # (39) dual ascent with the kappa_t ramp (40)
-            kappa = kappa_schedule(t.astype(phi.dtype) + 1.0, self.xi)
+            kappa = kappa_schedule(t.astype(phi.dtype) + 1.0, xi)
             resid = deg[:, None] * phi_new - neigh_sum(phi_new)
-            lam_new = lam + kappa * self.rho / 2.0 * resid
+            lam_new = lam + kappa * rho / 2.0 * resid
             if self.lam_max is not None:
                 bound = self.lam_max * jnp.abs(phi_star)
                 lam_new = jnp.clip(lam_new, -bound, bound)
@@ -725,9 +740,9 @@ class ADMMConsensus:
                 clip_count = jax.lax.psum(clip_count, axis)
             diag = ConsensusDiagnostics(
                 primal_resid=self._block_norms(resid, None, axis=axis),
-                dual_resid=self._block_norms(self.rho * (phi_new - phi),
+                dual_resid=self._block_norms(rho * (phi_new - phi),
                                              None, axis=axis),
-                rho=jnp.asarray(self.rho, phi.dtype),
+                rho=jnp.asarray(rho, phi.dtype),
                 kappa=kappa.astype(phi.dtype),
                 clip_count=clip_count,
                 reset_count=jnp.zeros((), jnp.int32),
@@ -735,10 +750,10 @@ class ADMMConsensus:
                 link_frac=link_frac)
             return phi_new, lam_new, diag
         return self._adaptive_step(model, phi, carry, phi_star, deg,
-                                   neigh_sum, link_frac, axis=axis)
+                                   neigh_sum, link_frac, xi, axis=axis)
 
     def _adaptive_step(self, model, phi, carry, phi_star, deg, neigh_sum,
-                       link_frac, *, axis=None):
+                       link_frac, xi, *, axis=None):
         lam, rho_vec, stable, t_act, active = carry
         dt = phi.dtype
         if self.per_block:
@@ -779,7 +794,7 @@ class ADMMConsensus:
         if self.dual_reset is not None:
             t_act = jnp.where(any_clip, 0.0, t_act)   # ramp reset on clip
         kappa = jnp.where(t_act > 0.0,
-                          kappa_schedule(t_act, self.xi), 0.0).astype(dt)
+                          kappa_schedule(t_act, xi), 0.0).astype(dt)
 
         # (39) dual ascent
         lam_new = lam + kappa * rho_coord / 2.0 * resid
@@ -1033,7 +1048,8 @@ def vb_init(model, data, topology, *, schedule: Schedule = Schedule(),
 
 
 def _iteration(model, data, base_mask, topology, schedule, replication,
-               minibatch, phi, carry, st, t, *, axis=None, local=None):
+               minibatch, phi, carry, st, t, *, axis=None, local=None,
+               hyper=None):
     """ONE VB iteration — the kernel shared by `_scan_steps` (both
     executors), `vb_step`, and the serving fleet (`session_step_fn`).
 
@@ -1052,27 +1068,74 @@ def _iteration(model, data, base_mask, topology, schedule, replication,
     phi_star = model.local_optimum(data_t, phi, replication)
     phi_new, carry_new, diag = topology.step(model, phi, carry, phi_star, t,
                                              schedule, axis=axis,
-                                             local=local)
+                                             local=local, hyper=hyper)
     return phi_new, carry_new, st_new, diag
 
 
 def session_step_fn(session: VBSession, *, axis=None, local=None):
     """One-iteration kernel over raw state pytrees, with the data buffers
-    as an ARGUMENT: fn(data, phi, carry, stream, t) -> (phi', carry',
-    stream', diag).  This is the function the serving layer
-    (serving/vb_service.py) vmaps over a leading fleet axis — per-session
-    data must be a mapped operand, which is why it is not closed over."""
+    as an ARGUMENT: fn(data, phi, carry, stream, t, hyper=None) ->
+    (phi', carry', stream', diag).  This is the function the serving
+    layer (serving/vb_service.py) vmaps over a leading fleet axis —
+    per-session data must be a mapped operand, which is why it is not
+    closed over.  `hyper` is the per-session lifted-hyper dict (see
+    `hyper_names`): the serving fleet maps it alongside the data so
+    sessions differing only in schedule/penalty constants share one
+    compiled step; None keeps the session's static values."""
     model, topology = session.model, session.topology
     schedule, replication = session.schedule, session.replication
     minibatch = session.minibatch
 
-    def fn(data, phi, carry, st, t):
+    def fn(data, phi, carry, st, t, hyper=None):
         base_mask = model.data_mask(data) if minibatch is not None else None
         return _iteration(model, data, base_mask, topology, schedule,
                           replication, minibatch, phi, carry, st, t,
-                          axis=axis, local=local)
+                          axis=axis, local=local, hyper=hyper)
 
     return fn
+
+
+def hyper_names(topology, schedule: Schedule) -> tuple:
+    """Names of the hyperparameters a (topology, schedule) pair reads per
+    ITERATION as plain scalars — the ones the serving layer can lift onto
+    the fleet axis so sessions differing only in them share one compiled
+    fleet (docs/bucketed-admission.md).
+
+    * Robbins-Monro schedules (`eta_fixed=None` on a combine topology)
+      read `tau` / `d0` in `Schedule.eta`.  A fixed eta is NOT lifted:
+      `eta_fixed == 1.0` selects the one-shot jump as a static branch in
+      `_CombineTopology.step`, so it must stay in the group key.
+    * `ADMMConsensus` reads the penalty `rho` and ramp rate `xi` — except
+      under `adaptive_rho`, where rho lives in the per-session carry
+      (seeded by `init_carry`) and only `xi` is read statically.
+    """
+    names = []
+    if getattr(topology, "uses_schedule", True) \
+            and schedule.eta_fixed is None:
+        names += ["tau", "d0"]
+    if isinstance(topology, ADMMConsensus):
+        names += ["xi"] if topology.adaptive_rho else ["rho", "xi"]
+    return tuple(names)
+
+
+def lifted_attr_names(topology) -> tuple:
+    """Topology attributes excluded from the fleet-group signature
+    because per-session values reach the step another way — via the
+    lifted-hyper dict (`hyper_names`) or the carry (adaptive-rho ADMM
+    seeds rho from `init_carry`).  Strictly a superset of the
+    topology-owned `hyper_names` entries."""
+    return ("rho", "xi") if isinstance(topology, ADMMConsensus) else ()
+
+
+def session_hyper(topology, schedule: Schedule, dtype) -> dict:
+    """The per-session lifted-hyper dict consumed by `session_step_fn`'s
+    `hyper` argument: each `hyper_names` entry as a scalar array (the
+    serving fleet stacks these along the leading fleet axis)."""
+    out = {}
+    for n in hyper_names(topology, schedule):
+        src = schedule if n in ("tau", "d0") else topology
+        out[n] = jnp.asarray(getattr(src, n), dtype)
+    return out
 
 
 def _scan_steps(model, data, topology, schedule, replication, ref_phi,

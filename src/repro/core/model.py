@@ -117,6 +117,18 @@ class ConjugateExpModel(Protocol):
         Host-side (eager) — the serving layer calls it between slices."""
         ...
 
+    def pad_to_capacity(self, data: Any, capacity: int) -> Any:
+        """Grow every node's sample buffer to `capacity` slots by appending
+        mask-zero padding (values zero, mask zero).  The serving layer's
+        bucketed admission (serving/admission.py) pads sessions up to a
+        shared ladder rung so near-same-shape sessions share one compiled
+        fleet; the appended slots are inert — the engine's ordered
+        reductions keep the padded trajectory BIT-equal to the unpadded
+        one — and double as free capacity for `append_node_data`.
+        Raises ValueError if `capacity` is below the current buffer size.
+        Host-side (eager)."""
+        ...
+
 
 # ---------------------------------------------------------------------------
 # Bayesian GMM (the paper's worked example)
@@ -182,6 +194,18 @@ class GMMModel:
         slots = free[:points.shape[0]]
         return (x.at[node, slots].set(points),
                 mask.at[node, slots].set(jnp.ones((), mask.dtype)))
+
+    def pad_to_capacity(self, data, capacity):
+        x, mask = data
+        T = x.shape[1]
+        if capacity < T:
+            raise ValueError(
+                f"capacity {capacity} < current buffer size {T}")
+        if capacity == T:
+            return data
+        pad = capacity - T
+        return (jnp.pad(x, ((0, 0), (0, pad), (0, 0))),
+                jnp.pad(mask, ((0, 0), (0, pad))))
 
     def project_to_domain(self, phi: jnp.ndarray) -> jnp.ndarray:
         return expfam.project_to_domain(phi, self.K, self.D)
@@ -296,3 +320,16 @@ class LinRegModel:
         return (X.at[node, slots].set(X_new),
                 y.at[node, slots].set(y_new),
                 mask.at[node, slots].set(jnp.ones((), mask.dtype)))
+
+    def pad_to_capacity(self, data, capacity):
+        X, y, mask = self._raw_data(data)
+        T = X.shape[1]
+        if capacity < T:
+            raise ValueError(
+                f"capacity {capacity} < current buffer size {T}")
+        if capacity == T:
+            return data
+        pad = capacity - T
+        return (jnp.pad(X, ((0, 0), (0, pad), (0, 0))),
+                jnp.pad(y, ((0, 0), (0, pad))),
+                jnp.pad(mask, ((0, 0), (0, pad))))

@@ -17,7 +17,14 @@ Continuous batching (serving/driver.py): `--max-fleet` fixes the fleet
 capacity — later arrivals queue until an eviction frees a slot, with
 zero recompilation — and `--arrive-at` staggers session admission to
 the given slice boundaries (cycled), demonstrating mid-flight join.
-The run ends by printing the `DriverStats` counters.
+
+Bucketed admission (docs/bucketed-admission.md): `--per-node` and
+`--taus` take comma-separated lists (cycled over sessions), so a MIXED
+fleet — several data shapes, several Robbins-Monro taus — still lands
+in one compiled fleet group per capacity rung; `--bucket` selects the
+ladder ("pow2", a growth factor like 1.25, or "none" for legacy
+exact-shape grouping).  The run ends by printing the `DriverStats`
+counters plus the per-bucket occupancy/padding breakdown.
 """
 import argparse
 import os
@@ -29,7 +36,16 @@ def main():
     ap.add_argument("--budgets", default="30,60",
                     help="comma-separated per-session iteration budgets")
     ap.add_argument("--nodes", type=int, default=8)
-    ap.add_argument("--per-node", type=int, default=20)
+    ap.add_argument("--per-node", default="20",
+                    help="comma-separated per-node sample counts (cycled; "
+                         "mixed values exercise bucketed admission)")
+    ap.add_argument("--taus", default="",
+                    help="comma-separated schedule taus (cycled over the "
+                         "sessions whose topology has a natural-gradient "
+                         "step; empty = the default tau)")
+    ap.add_argument("--bucket", default="pow2",
+                    help='admission ladder: "pow2", a growth factor '
+                         '(e.g. 1.25), or "none"')
     ap.add_argument("--slice", type=int, default=16)
     ap.add_argument("--tol", type=float, default=0.0)
     ap.add_argument("--topology", default="mixed",
@@ -74,17 +90,26 @@ def main():
 
     arrivals = ([int(a) for a in args.arrive_at.split(",")]
                 if args.arrive_at else [0])
+    per_node = [int(p) for p in args.per_node.split(",")]
+    taus = [float(t) for t in args.taus.split(",")] if args.taus else []
+    bucket = (None if args.bucket == "none"
+              else "pow2" if args.bucket == "pow2" else float(args.bucket))
 
     svc = VBService(slice_iters=args.slice,
-                    max_fleet=args.max_fleet or None)
+                    max_fleet=args.max_fleet or None, bucket=bucket)
     requests = {}
     for i in range(args.sessions):
-        data = synthetic.paper_synthetic(n_nodes=args.nodes,
-                                         n_per_node=args.per_node, seed=i)
+        data = synthetic.paper_synthetic(
+            n_nodes=args.nodes, n_per_node=per_node[i % len(per_node)],
+            seed=i)
         # leave one free slot per node so --push-at has capacity
         mask = data.mask.at[:, -1].set(0.0)
+        topo = topos[order[i % len(order)]]
+        sched = engine.Schedule()
+        if taus and getattr(topo, "uses_schedule", True):
+            sched = engine.Schedule(tau=taus[i % len(taus)])
         req = VBRequest(model=mdl, data=(data.x, mask),
-                        topology=topos[order[i % len(order)]],
+                        topology=topo, schedule=sched,
                         n_iters=budgets[i % len(budgets)],
                         minibatch=minibatch, tol=args.tol)
         rid = svc.submit(req, arrive_at=arrivals[i % len(arrivals)])
@@ -137,6 +162,10 @@ def main():
           f"occupancy {st.occupancy:.2f} "
           f"(padding waste {st.padding_waste:.2f}), "
           f"{st.checkpoints} background checkpoints")
+    for b in st.buckets:
+        print(f"  bucket {b.label}: {b.admitted} admitted over "
+              f"{b.slots} slot(s), occupancy {b.occupancy:.2f}, "
+              f"data padding {b.data_pad_frac:.2f}")
     print(f"served {args.sessions} session(s) in {n_slices} slice(s)")
 
 

@@ -26,6 +26,13 @@ continuous-batching decomposition used by LM inference engines:
 * **CheckpointWriter** — a daemon thread doing device→host transfer and
   .npz compression off the scheduler thread, overlapped with the
   in-flight slice.
+* **Bucketed admission** — fleet groups are keyed by the BUCKETED data
+  shape: per-node buffers pad with mask-zero slots up to a capacity
+  ladder rung (`admission.bucket_capacity`) and per-iteration hyper
+  constants (tau/d0, rho/xi) lift to per-slot fleet arrays
+  (`engine.session_hyper`), so mixed-shape mixed-hyper sessions share
+  one compiled fleet — bit-equal to their solo runs via the engine's
+  ordered reductions (docs/bucketed-admission.md).
 * **Eviction is safe** because of the absolute-`t` resumability contract
   (engine.VBState): every per-iteration source — minibatch epochs, link
   drops, eta/kappa ramps — is a pure function of the session's own `t`,
@@ -129,6 +136,20 @@ class SlotTable:
         return self.capacity - len(self._free)
 
 
+class BucketStats(NamedTuple):
+    """Per-fleet-group (= per admission bucket) scheduler counters."""
+
+    label: str               # "<Model>/N<nodes>/cap<rung>" or ".../exact"
+    bucket_capacity: Optional[int]  # data-capacity rung (None = unbucketed)
+    slots: int               # fleet slot capacity now
+    admitted: int            # sessions ever admitted into this group
+    active: int              # now: occupied slots that still have work
+    occupancy: float         # time-averaged active/slots over stepped slices
+    padding_waste: float     # 1 - occupancy: stepped-but-masked slot frac
+    data_pad_frac: float     # mean fraction of mask-zero rung-padding
+    #                          slots per admitted session (0 = exact fit)
+
+
 class DriverStats(NamedTuple):
     """Host-side scheduler counters (cumulative unless noted)."""
 
@@ -142,6 +163,7 @@ class DriverStats(NamedTuple):
     occupancy: float     # time-averaged active/capacity over stepped slices
     padding_waste: float  # 1 - occupancy: fraction of stepped slots masked
     checkpoints: int     # background checkpoint writes completed
+    buckets: tuple = ()  # per-group BucketStats breakdown (VB driver only)
 
 
 class _PendingSave:
@@ -224,9 +246,9 @@ def _gated_step(step_fn, axis=None):
     early-stop delta is pmean-reduced so every shard takes the identical
     stop decision."""
 
-    def one(data, phi, carry, st, t, conv, budget, tol, delta_prev):
+    def one(data, phi, carry, st, t, conv, budget, tol, delta_prev, hyper):
         active = jnp.logical_and(~conv, t < budget)
-        phi2, carry2, st2, _ = step_fn(data, phi, carry, st, t)
+        phi2, carry2, st2, _ = step_fn(data, phi, carry, st, t, hyper)
         msq = jnp.mean((phi2 - phi) ** 2)
         if axis is not None:
             msq = jax.lax.pmean(msq, axis)
@@ -246,13 +268,15 @@ def _gated_step(step_fn, axis=None):
 
 
 def _slice_scan(one, k):
-    """k gated iterations over the vmapped fleet as one lax.scan."""
+    """k gated iterations over the vmapped fleet as one lax.scan.
+    `hyper` is the per-slot lifted-hyper pytree (engine.session_hyper),
+    mapped alongside the data — constant within the slice."""
 
-    def slice_fn(data, phi, carry, st, t, conv, budget, tol, delta):
+    def slice_fn(data, phi, carry, st, t, conv, budget, tol, delta, hyper):
         def body(c, _):
             phi, carry, st, t, conv, delta = c
             return jax.vmap(one)(data, phi, carry, st, t, conv, budget,
-                                 tol, delta), None
+                                 tol, delta, hyper), None
 
         init = (phi, carry, st, t, conv, delta)
         (phi, carry, st, t, conv, delta), _ = jax.lax.scan(
@@ -275,20 +299,28 @@ class FleetGroup:
     item 1's bucketed admission)."""
 
     def __init__(self, session: engine.VBSession, executor,
-                 max_fleet: Optional[int] = None):
+                 max_fleet: Optional[int] = None,
+                 bucket_capacity: Optional[int] = None):
         self.session = session          # template (data ignored per-slot)
         self.executor = executor
         self.max_fleet = max_fleet
+        self.bucket_capacity = bucket_capacity  # data rung; None = exact
         self.slots: Optional[SlotTable] = None
         self.data = None                # (capacity, ...) pytrees
         self.phi = self.carry = self.stream = None
         self.t = self.conv = self.budget = self.tol = self.delta = None
+        self.hyper = None               # per-slot lifted-hyper pytree
         # host mirrors of the per-slot flag vectors (refreshed by
         # fetch_flags after each slice; mutated in step with control ops)
         self.host_t = self.host_conv = None
         self.host_budget = self.host_delta = None
         self._compiled = {}             # k -> compiled slice fn
         self._retired_compiles = 0
+        # per-bucket accounting (read by VBDriver.stats)
+        self.n_admitted = 0
+        self.pad_frac_sum = 0.0         # sum over admits of padded-slot frac
+        self.occ_active = 0             # sum of active counts over slices
+        self.occ_slots = 0              # sum of capacities over slices
 
     @property
     def capacity(self) -> int:
@@ -302,6 +334,7 @@ class FleetGroup:
         self.phi = bcast(record["phi"])
         self.carry = jax.tree_util.tree_map(bcast, record["carry"])
         self.stream = jax.tree_util.tree_map(bcast, record["stream"])
+        self.hyper = jax.tree_util.tree_map(bcast, record["hyper"])
         self.t = bcast(record["t"])
         self.conv = jnp.ones((cap,), bool)          # free slots: inert
         self.budget = jnp.zeros((cap,), record["t"].dtype)
@@ -323,6 +356,7 @@ class FleetGroup:
         self.phi = pad(self.phi)
         self.carry = jax.tree_util.tree_map(pad, self.carry)
         self.stream = jax.tree_util.tree_map(pad, self.stream)
+        self.hyper = jax.tree_util.tree_map(pad, self.hyper)
         self.t = pad(self.t)
         self.conv = jnp.concatenate(
             [self.conv, jnp.ones((new - old,), bool)])
@@ -424,25 +458,26 @@ class FleetGroup:
         carry_spec = fleet(carry_b) if has_carry else carry_b
         stream_spec = fleet(stream_b) if has_stream else stream_b
         rep = P()                       # per-session scalars: replicated
+        hyper_spec = jax.tree_util.tree_map(lambda _: rep, self.hyper)
         in_specs = (data_specs, phi_spec, carry_spec, stream_spec,
-                    rep, rep, rep, rep, rep) + local_specs
+                    rep, rep, rep, rep, rep, hyper_spec) + local_specs
         out_specs = (phi_spec, carry_spec, stream_spec, rep, rep, rep)
 
         def run(data_l, phi_l, carry_l, st_l, t, conv, budget, tol, delta,
-                *local_vals):
+                hyper, *local_vals):
             local = dict(zip(local_keys, local_vals))
             one = _gated_step(
                 engine.session_step_fn(ses, axis=axis, local=local),
                 axis=axis)
             return _slice_scan(one, k)(data_l, phi_l, carry_l, st_l, t,
-                                       conv, budget, tol, delta)
+                                       conv, budget, tol, delta, hyper)
 
         fn = compat.shard_map(run, mesh=mesh, in_specs=in_specs,
                               out_specs=out_specs, check_vma=False)
 
-        def call(data, phi, carry, st, t, conv, budget, tol, delta):
+        def call(data, phi, carry, st, t, conv, budget, tol, delta, hyper):
             return fn(data, phi, carry, st, t, conv, budget, tol, delta,
-                      *(local_inputs[kk] for kk in local_keys))
+                      hyper, *(local_inputs[kk] for kk in local_keys))
 
         return call
 
@@ -451,7 +486,8 @@ class FleetGroup:
         with futures; host work may overlap until fetch_flags syncs)."""
         out = self._slice_fn(k)(self.data, self.phi, self.carry,
                                 self.stream, self.t, self.conv,
-                                self.budget, self.tol, self.delta)
+                                self.budget, self.tol, self.delta,
+                                self.hyper)
         (self.phi, self.carry, self.stream, self.t, self.conv,
          self.delta) = out
 
@@ -494,7 +530,8 @@ class FleetGroup:
                     stream=_tree_index(self.stream, i),
                     conv=self.conv[i], budget=self.budget[i],
                     tol=self.tol[i], delta=self.delta[i],
-                    data=_tree_index(self.data, i))
+                    data=_tree_index(self.data, i),
+                    hyper=_tree_index(self.hyper, i))
 
     def load_state_tree(self, i: int, tree: dict) -> None:
         self.phi = self.phi.at[i].set(tree["phi"])
@@ -506,6 +543,7 @@ class FleetGroup:
         self.tol = self.tol.at[i].set(tree["tol"])
         self.delta = self.delta.at[i].set(tree["delta"])
         self.data = _tree_set(self.data, i, tree["data"])
+        self.hyper = _tree_set(self.hyper, i, tree["hyper"])
 
 
 class SessionStatus(NamedTuple):
@@ -535,9 +573,26 @@ class VBDriver:
         auto-growth, the drop-in behaviour `VBService` defaults to.
     executor : optional `engine.MeshExecutor` (node axis sharded, fleet
         vmap inside the shard_map body).
+    bucket : capacity-bucketed admission.  "pow2" (default) pads each
+        session's per-node data buffers up to the next power-of-two
+        ladder rung (`admission.bucket_capacity`) with mask-zero slots,
+        so near-same-shape sessions share one compiled fleet; a float
+        (> 1) is a custom ladder growth factor (e.g. 1.25); None keeps
+        the PR-6 exact-signature grouping.  Bit-safe: the engine's
+        ordered reductions make padded trajectories bit-equal to
+        unpadded ones (docs/bucketed-admission.md).  Minibatch sessions
+        are never padded (the streaming sampler's epoch permutations are
+        a function of the true capacity), nor are data pytrees the model
+        cannot pad (no `pad_to_capacity`, e.g. a LinReg phi* stack).
+    bucket_min : smallest ladder rung.
     ckpt_dir / ckpt_every : when set, every `ckpt_every` slices each
         occupied slot's boundary state is handed to the background
         `CheckpointWriter` as `<ckpt_dir>/<rid>.npz`.
+
+    Sessions differing ONLY in per-iteration hyperparameters — the
+    schedule's tau/d0, ADMM's rho/xi (`engine.hyper_names`) — also share
+    a fleet: those constants are lifted to per-slot arrays mapped through
+    the compiled step alongside the data (`engine.session_hyper`).
 
     Drive it synchronously (`tick()` / `drain()`) or start the
     background scheduler thread (`start()`), then `submit` / `push_data`
@@ -548,11 +603,21 @@ class VBDriver:
     def __init__(self, *, slice_iters: int = 25,
                  max_fleet: Optional[int] = None,
                  executor: Optional[engine.MeshExecutor] = None,
+                 bucket: Optional[str | float] = "pow2",
+                 bucket_min: int = 8,
                  ckpt_dir: Optional[str] = None, ckpt_every: int = 0):
         if slice_iters < 1:
             raise ValueError(f"slice_iters must be >= 1: {slice_iters}")
         if max_fleet is not None and max_fleet < 1:
             raise ValueError(f"max_fleet must be >= 1: {max_fleet}")
+        if bucket is None or bucket == "pow2":
+            self._bucket_growth = 2.0 if bucket == "pow2" else None
+        else:
+            self._bucket_growth = float(bucket)
+            if self._bucket_growth <= 1.0:
+                raise ValueError(f"bucket growth must be > 1.0: {bucket}")
+        self.bucket = bucket
+        self.bucket_min = int(bucket_min)
         self.slice_iters = slice_iters
         self.max_fleet = max_fleet
         self.executor = executor
@@ -579,14 +644,43 @@ class VBDriver:
         self._thread: Optional[threading.Thread] = None
 
     # -- admission --------------------------------------------------------
-    def _group_key(self, req) -> tuple:
-        # structural signatures (arrays by identity), so tenants built as
-        # `Diffusion(W)` per request still share one fleet as long as
-        # they share the weight matrix / adjacency / prior arrays
-        return (admission.static_signature(req.model),
-                admission.static_signature(req.topology),
-                admission.shape_signature(req.data), req.schedule,
-                req.replication, req.minibatch)
+    def _session_key(self, model, topology, schedule, replication,
+                     minibatch, data) -> tuple:
+        """Fleet-group key: structural signatures (small arrays by
+        content digest), shapes of the ALREADY-BUCKETED data, and only
+        the hyperparameters the compiled step actually specializes on —
+        lifted ones (`engine.lifted_attr_names` / the schedule's tau+d0)
+        are stripped, since per-session values flow through the fleet's
+        hyper arrays (or the carry) instead of the trace."""
+        topo_sig = admission.static_signature(
+            topology, ignore=engine.lifted_attr_names(topology))
+        # tau/d0 are dead when eta is fixed and lifted otherwise; only
+        # eta_fixed itself picks a static branch (the one-shot jump)
+        sched_key = ("eta_fixed", schedule.eta_fixed)
+        return (admission.static_signature(model), topo_sig,
+                admission.shape_signature(data), sched_key,
+                replication, minibatch)
+
+    def _bucket_plan(self, req):
+        """(data on the ladder rung, (true_cap, rung)) — or
+        (req.data, None) when bucketing does not apply: disabled,
+        minibatch (epoch permutations are a function of the true
+        capacity), or a data pytree the model cannot pad."""
+        if self.bucket is None or req.minibatch is not None:
+            return req.data, None
+        pad = getattr(req.model, "pad_to_capacity", None)
+        mask_of = getattr(req.model, "data_mask", None)
+        if pad is None or mask_of is None:
+            return req.data, None
+        try:
+            true_cap = int(mask_of(req.data).shape[1])
+        except (ValueError, IndexError):    # e.g. LinReg phi* stack
+            return req.data, None
+        rung = admission.bucket_capacity(true_cap,
+                                         growth=self._bucket_growth,
+                                         min_size=self.bucket_min)
+        data = pad(req.data, rung) if rung != true_cap else req.data
+        return data, (true_cap, rung)
 
     def submit(self, req, *, arrive_at: Optional[int] = None,
                restore_from: Optional[str] = None) -> str:
@@ -597,8 +691,9 @@ class VBDriver:
         resuming it bit-exactly."""
         if req.n_iters < 1:
             raise ValueError(f"n_iters must be >= 1: {req.n_iters}")
+        data, bucket = self._bucket_plan(req)
         state = engine.vb_init(
-            req.model, req.data, req.topology, schedule=req.schedule,
+            req.model, data, req.topology, schedule=req.schedule,
             replication=req.replication, init_phi=req.init_phi,
             minibatch=req.minibatch, diagnostics=False)
         dt = state.phi.dtype
@@ -606,19 +701,23 @@ class VBDriver:
                       stream=state.stream, conv=jnp.zeros((), bool),
                       budget=jnp.asarray(req.n_iters, state.t.dtype),
                       tol=jnp.asarray(req.tol, dt),
-                      delta=jnp.zeros((), dt), data=state.session.data)
+                      delta=jnp.zeros((), dt), data=state.session.data,
+                      hyper=engine.session_hyper(req.topology,
+                                                 req.schedule, dt))
         if restore_from is not None:
             record = ckpt.restore(restore_from, record)
-        key = self._group_key(req)
+        key = self._session_key(req.model, req.topology, req.schedule,
+                                req.replication, req.minibatch, data)
         with self._lock:
             rid = f"s{self._counter:04d}"
             self._counter += 1
             self._order.append(rid)
             at = self._clock if arrive_at is None else int(arrive_at)
             self._meta[rid] = dict(submitted=time.monotonic(),
-                                   finished=None, arrive_at=at)
+                                   finished=None, arrive_at=at,
+                                   bucket=bucket)
             entry = dict(rid=rid, key=key, session=state.session,
-                         record=record)
+                         record=record, bucket=bucket)
             self._queued[rid] = entry
             self._queue.push(entry, at)
             self._try_admit()
@@ -637,10 +736,13 @@ class VBDriver:
                 self._retire(rid, dict(record=rec, key=entry["key"],
                                        session=entry["session"]))
                 continue
+            bucket = self._meta[rid].get("bucket")
             group = self._groups.get(entry["key"])
             if group is None:
                 group = FleetGroup(entry["session"], self.executor,
-                                   max_fleet=self.max_fleet)
+                                   max_fleet=self.max_fleet,
+                                   bucket_capacity=(bucket[1] if bucket
+                                                    else None))
                 self._groups[entry["key"]] = group
             slot = group.admit(rid, rec)
             if slot is None:
@@ -649,6 +751,9 @@ class VBDriver:
             self._queued.pop(rid, None)
             self._where[rid] = (entry["key"], slot)
             self._n_admitted += 1
+            group.n_admitted += 1
+            if bucket is not None:
+                group.pad_frac_sum += (bucket[1] - bucket[0]) / bucket[1]
 
     def _retire(self, rid: str, fin: dict) -> None:
         self._finished[rid] = fin
@@ -672,8 +777,11 @@ class VBDriver:
                     snaps.extend((rid, g.state_tree(slot))
                                  for slot, rid in g.slots.occupied())
             for g in stepped:
-                self._occ_active += g.active_count()
+                n_act = g.active_count()
+                self._occ_active += n_act
                 self._occ_slots += g.capacity
+                g.occ_active += n_act
+                g.occ_slots += g.capacity
                 g.step_slice(self.slice_iters)      # async dispatch
             if stepped:
                 self._slices += 1
@@ -781,6 +889,25 @@ class VBDriver:
         with self._lock:
             return list(self._order)
 
+    def _bucket_stats(self) -> tuple:
+        out = []
+        for g in self._groups.values():
+            data = g.data if g.data is not None else g.session.data
+            n_nodes = jax.tree_util.tree_leaves(data)[0].shape[
+                1 if g.data is not None else 0]
+            cap = g.bucket_capacity
+            label = (f"{type(g.session.model).__name__}/N{n_nodes}/"
+                     + (f"cap{cap}" if cap is not None else "exact"))
+            occ = g.occ_active / g.occ_slots if g.occ_slots else 0.0
+            out.append(BucketStats(
+                label=label, bucket_capacity=cap, slots=g.capacity,
+                admitted=g.n_admitted, active=g.active_count(),
+                occupancy=occ,
+                padding_waste=(1.0 - occ) if g.occ_slots else 0.0,
+                data_pad_frac=(g.pad_frac_sum / g.n_admitted
+                               if g.n_admitted else 0.0)))
+        return tuple(sorted(out, key=lambda b: b.label))
+
     def stats(self) -> DriverStats:
         with self._lock:
             active = sum(g.active_count() for g in self._groups.values())
@@ -794,7 +921,8 @@ class VBDriver:
                 queue_depth=len(self._queued), active=active,
                 capacity=capacity, occupancy=occ,
                 padding_waste=(1.0 - occ) if self._occ_slots else 0.0,
-                checkpoints=self._writer.completed)
+                checkpoints=self._writer.completed,
+                buckets=self._bucket_stats())
 
     # -- mid-flight control ops (apply at slice boundaries) ---------------
     def push_data(self, rid: str, node: int, points: Any) -> None:
@@ -802,31 +930,101 @@ class VBDriver:
         (into padding slots — `model.append_node_data`) and un-latch the
         session's convergence flag.  An EVICTED session whose budget
         still has room goes back through the arrival queue and resumes
-        in any free slot (bit-exact, absolute-t contract)."""
+        in any free slot (bit-exact, absolute-t contract).
+
+        A BUCKETED session whose buffer overflows is not an error: the
+        session is evicted from its fleet, its buffers regrown to the
+        next ladder rung that fits, and it re-enters the queue under the
+        larger bucket's group key — same absolute-t resume contract, so
+        the trajectory matches a solo run on the regrown buffers."""
         with self._lock:
             if rid in self._where:
                 key, i = self._where[rid]
                 g = self._groups[key]
                 data_i = _tree_index(g.data, i)
-                new = g.session.model.append_node_data(data_i, node, points)
-                g.data = _tree_set(g.data, i, new)
-                g.conv = g.conv.at[i].set(False)
-                g.host_conv[i] = False
+                try:
+                    new = g.session.model.append_node_data(data_i, node,
+                                                           points)
+                except ValueError:
+                    if self._meta[rid].get("bucket") is None:
+                        raise
+                    record = g.evict(i)
+                    del self._where[rid]
+                    self._n_evicted += 1
+                    self._retire(rid, dict(record=record, key=key,
+                                           session=g.session))
+                    self._rebucket(rid, node, points)
+                    self._maybe_requeue(rid)
+                else:
+                    g.data = _tree_set(g.data, i, new)
+                    g.conv = g.conv.at[i].set(False)
+                    g.host_conv[i] = False
             elif rid in self._finished or rid in self._queued:
                 fin = (self._finished.get(rid) or self._queued[rid])
                 rec = fin["record"]
-                rec["data"] = fin["session"].model.append_node_data(
-                    rec["data"], node, points)
-                rec["conv"] = jnp.zeros((), bool)
+                try:
+                    rec["data"] = fin["session"].model.append_node_data(
+                        rec["data"], node, points)
+                except ValueError:
+                    if self._meta[rid].get("bucket") is None:
+                        raise
+                    self._rebucket(rid, node, points)
+                else:
+                    rec["conv"] = jnp.zeros((), bool)
                 if rid in self._finished:
                     self._maybe_requeue(rid)
             else:
                 raise KeyError(f"unknown session {rid!r}")
         self._wake.set()
 
+    def _rebucket(self, rid: str, node: int, points: Any) -> None:
+        """Grow an overflowing bucketed session to the next ladder rung
+        that fits `points`, append them, and re-key it (lock held; the
+        rid is in `_finished` or `_queued`)."""
+        fin = self._finished.get(rid) or self._queued[rid]
+        rec, ses = fin["record"], fin["session"]
+        model = ses.model
+        true_cap, rung = self._meta[rid]["bucket"]
+        data = rec["data"]
+        for _ in range(64):             # each rung at least doubles room
+            rung = admission.bucket_capacity(
+                rung + 1, growth=self._bucket_growth,
+                min_size=self.bucket_min)
+            grown = model.pad_to_capacity(data, rung)
+            try:
+                grown = model.append_node_data(grown, node, points)
+                break
+            except ValueError:
+                continue
+        else:
+            raise ValueError(
+                f"session {rid!r}: could not grow buffers to fit "
+                "pushed points")
+        rec["data"] = grown
+        rec["conv"] = jnp.zeros((), bool)
+        self._meta[rid]["bucket"] = (true_cap, rung)
+        fin["session"] = engine.VBSession(
+            model, grown, ses.topology, ses.schedule, ses.replication,
+            ses.ref_phi, ses.executor, ses.minibatch, ses.diagnostics,
+            ses.metric_nodes)
+        fin["key"] = self._session_key(model, ses.topology, ses.schedule,
+                                       ses.replication, ses.minibatch,
+                                       grown)
+
     def replace_data(self, rid: str, data: Any) -> None:
-        """Replace a session's data buffers wholesale (same shapes)."""
+        """Replace a session's data buffers wholesale (same shapes; a
+        bucketed session accepts any data that pads to its rung)."""
         with self._lock:
+            bucket = self._meta.get(rid, {}).get("bucket")
+            if bucket is not None:
+                if rid in self._where:
+                    model = self._groups[self._where[rid][0]].session.model
+                else:
+                    fin = (self._finished.get(rid)
+                           or self._queued.get(rid))
+                    model = fin["session"].model if fin else None
+                if model is not None:
+                    data = model.pad_to_capacity(data, bucket[1])
             cur = self._current_data(rid)
             sig_new = admission.shape_signature(data)
             sig_old = admission.shape_signature(cur)

@@ -94,14 +94,32 @@ class Engine:
     has all its tokens is idle-masked while its wave-mates keep
     decoding), and `stats()` reports the same `DriverStats` counters —
     compiles, occupancy, padding waste — the VB driver reports.
-    `max_batch=None` admits every request in one wave."""
+    `max_batch=None` admits every request in one wave.
+
+    `bucket` enables prompt-LENGTH bucketing through the same capacity
+    ladder the VB driver uses (`admission.bucket_capacity`): each wave
+    admits only prompts sharing a ladder rung and left-pads to the rung
+    (not to the wave max), so a request's prefill shape — and therefore
+    its greedy output, since left-padding reaches the non-longest rows'
+    logits — is a function of (prompt, rung) alone, independent of which
+    wave-mates it happens to batch with.  "pow2" = power-of-two rungs, a
+    float > 1 = custom growth factor, None (default) = legacy wave-max
+    padding."""
 
     def __init__(self, cfg: ModelConfig, mesh: Mesh, params, *,
                  max_seq: int = 1024, use_kernels: bool = False,
-                 seed: int = 0, max_batch: Optional[int] = None):
+                 seed: int = 0, max_batch: Optional[int] = None,
+                 bucket: Optional[str | float] = None,
+                 bucket_min: int = 8):
         self.cfg, self.mesh, self.params = cfg, mesh, params
         self.max_seq = max_seq
         self.max_batch = max_batch
+        if bucket is None or bucket == "pow2":
+            self._bucket_growth = 2.0 if bucket == "pow2" else None
+        else:
+            self._bucket_growth = float(bucket)
+        self.bucket = bucket
+        self.bucket_min = int(bucket_min)
         self.key = jax.random.PRNGKey(seed)
         self._prefill = jax.jit(make_prefill_step(cfg,
                                                   use_kernels=use_kernels))
@@ -125,25 +143,40 @@ class Engine:
             table = SlotTable(self.max_batch if self.max_batch is not None
                               else max(len(queue), 1))
             wave = []
+            wave_rung = None
             for entry in queue.pop_ready(0.0):
-                if table.alloc(f"r{entry[2]}") is None:
+                rung = self._rung(requests[entry[2]])
+                if wave_rung is None and not wave:
+                    wave_rung = rung            # head of queue sets the rung
+                if rung != wave_rung \
+                        or table.alloc(f"r{entry[2]}") is None:
                     queue.push_entry(entry)     # next wave
                 else:
                     wave.append(entry[2])
             outs = self._generate_wave([requests[i] for i in wave],
-                                       temperature)
+                                       temperature, wave_rung)
             for i, out in zip(wave, outs):
                 results[i] = out
             self._waves += 1
             self._n_admitted += len(wave)
         return results
 
+    def _rung(self, r: Request) -> Optional[int]:
+        """Prompt-length ladder rung (None with bucketing off)."""
+        if self.bucket is None:
+            return None
+        need = max(len(r.prompt), self.cfg.frontend_len + 1)
+        return admission.bucket_capacity(need,
+                                         growth=self._bucket_growth,
+                                         min_size=self.bucket_min)
+
     def _generate_wave(self, requests: list[Request],
-                       temperature: float) -> list[np.ndarray]:
+                       temperature: float,
+                       rung: Optional[int] = None) -> list[np.ndarray]:
         cfg = self.cfg
         B = len(requests)
-        plen = max(max(len(r.prompt) for r in requests),
-                   cfg.frontend_len + 1)
+        plen = rung if rung is not None else max(
+            max(len(r.prompt) for r in requests), cfg.frontend_len + 1)
         toks = admission.right_aligned_batch(
             [r.prompt for r in requests], length=plen)
         frontend = None

@@ -6,10 +6,14 @@ A `VBRequest` is one independent sensor network (dataset + topology +
 hyper + iteration budget); the `VBService` is the stable public API over
 the continuous-batching scheduler in `serving/driver.py`:
 
-* **admits** requests into fleet groups keyed by
-  `admission.shape_signature(data)` plus the static run configuration —
-  sessions that share model/topology objects, data shapes and hyper run
-  as ONE device batch;
+* **admits** requests into fleet groups keyed by the BUCKETED data
+  shape signature plus the static run configuration: per-node data
+  buffers are padded with mask-zero slots up to a shared capacity-ladder
+  rung (`admission.bucket_capacity`, bit-equal by the engine's ordered
+  reductions) and per-iteration hyperparameters like the schedule's tau
+  or ADMM's rho are lifted to per-slot fleet arrays
+  (`engine.hyper_names`) — so mixed-shape, mixed-hyper tenants run as
+  ONE device batch (docs/bucketed-admission.md);
 * **fleet-batches** each group along a leading slot axis: the engine's
   one-iteration kernel (`engine.session_step_fn`) is vmapped over the
   fleet, so 16 networks cost one compiled step, not 16 — and composes
@@ -89,6 +93,11 @@ class VBService:
     max_fleet : fixed fleet capacity (continuous batching: arrivals
         beyond it queue until an eviction frees a slot, with zero
         recompilation); None = power-of-two auto-growth.
+    bucket / bucket_min : capacity-bucketed admission (see `VBDriver`):
+        "pow2" (default) pads data buffers to power-of-two ladder rungs
+        so near-same-shape sessions share one compiled fleet; a float
+        > 1 is a custom ladder growth factor; None = exact-signature
+        grouping only.
     ckpt_dir / ckpt_every : background-checkpoint every occupied slot
         each `ckpt_every` slices into `<ckpt_dir>/<rid>.npz`.
     """
@@ -96,9 +105,12 @@ class VBService:
     def __init__(self, *, slice_iters: int = 25,
                  executor: Optional[engine.MeshExecutor] = None,
                  max_fleet: Optional[int] = None,
+                 bucket: Optional[str | float] = "pow2",
+                 bucket_min: int = 8,
                  ckpt_dir: Optional[str] = None, ckpt_every: int = 0):
         self.driver = VBDriver(slice_iters=slice_iters, executor=executor,
-                               max_fleet=max_fleet, ckpt_dir=ckpt_dir,
+                               max_fleet=max_fleet, bucket=bucket,
+                               bucket_min=bucket_min, ckpt_dir=ckpt_dir,
                                ckpt_every=ckpt_every)
 
     @property

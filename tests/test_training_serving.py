@@ -106,6 +106,26 @@ def test_engine_waves_match_single_batch():
     assert st.padding_waste == pytest.approx(1.0 - st.occupancy)
 
 
+def test_engine_prompt_bucketing_bit_identical():
+    """With `bucket` on, waves only mix same-rung prompts and pad to the
+    rung, so a request's greedy output is a function of (prompt, rung)
+    alone — the mixed-length batch must match bucketed solo runs bitwise."""
+    mesh = jax.make_mesh((1,), ("data",))
+    params = model.init_params(CFG, jax.random.PRNGKey(0))
+    reqs = [eng.Request(np.array([3, 5, 7], np.int32), 6),            # rung 8
+            eng.Request(np.arange(1, 13, dtype=np.int32), 6),         # rung 16
+            eng.Request(np.array([9, 9, 9, 9, 9], np.int32), 6),      # rung 8
+            eng.Request(np.arange(20, 30, dtype=np.int32), 6)]        # rung 16
+    kw = dict(max_seq=64, bucket="pow2", bucket_min=8)
+    solo = [eng.Engine(CFG, mesh, params, **kw).generate([r])[0]
+            for r in reqs]
+    e = eng.Engine(CFG, mesh, params, **kw)
+    outs = e.generate(reqs)
+    for a, b in zip(solo, outs):
+        np.testing.assert_array_equal(a, b)
+    assert e._waves == 2          # one wave per rung, not per request
+
+
 def test_data_pipeline_determinism():
     from repro.data.tokens import Batcher
     b1 = Batcher(128, 4, 32, seed=3)
