@@ -42,7 +42,7 @@ def main() -> None:
 
     from benchmarks import consensus_bench, gmm_backend_bench, kernel_bench, \
         linreg_bench, minibatch_bench, paper_figures, roofline, \
-        vb_service_bench, weights_ablation
+        topology_scale_bench, vb_service_bench, weights_ablation
     # (group, name, fn) — group is an --only alias for a family of benches
     benches = ([("paper_fig", f.__name__, f) for f in paper_figures.ALL]
                + [("weights_ablation", "weights_ablation",
@@ -60,6 +60,8 @@ def main() -> None:
                    vb_service_bench.run_mixed_fleet),
                   ("consensus_lm", "consensus_lm", consensus_bench.run),
                   ("consensus_vb", "consensus_vb", consensus_bench.vb_run),
+                  ("topology_scale", "topology_scale",
+                   topology_scale_bench.run),
                   ("roofline", "roofline", roofline.run)])
     if args.only:
         pre = tuple(args.only.split(","))

@@ -25,6 +25,13 @@ with Eqs. 38-40 spelled out lives in docs/ARCHITECTURE.md):
 * Eq. 47   nearest-neighbour weights            `network.nearest_neighbor_weights`
                                                 (ring case: `RingDiffusion`)
 
+Every graph topology runs dense ((N, N) matrix — the small-N parity
+oracle) or sparse (`network.SparseGraph` edge lists via `_sparse_combine`
+— O(E + N), 10k+ nodes), and two scenario topologies build on the sparse
+layer: `PairwiseGossip` (asynchronous randomized link activation,
+deterministic in (seed, absolute t)) and `HierarchicalFusion`
+(sensor -> gateway -> region).  See docs/sparse-topologies.md.
+
 `ADMMConsensus` additionally carries the adaptive-penalty consensus
 subsystem (off by default; Algorithm 2 verbatim otherwise): residual
 balancing of rho (Boyd et al., "Distributed Optimization and Statistical
@@ -281,11 +288,58 @@ class _LinkSchedule:
         return network_lib.ring_link_keep(self._link_key, t, n,
                                           self.link_drop, dtype)
 
+    def keep_edges(self, t, n_undirected: int, dtype) -> jnp.ndarray:
+        """Edge-list form: (E_undirected,) keep mask — one coin per
+        undirected link (`network.sparse_link_keep`), so a failed link is
+        failed both ways, exactly the dense contract.  A `link_mask_fn`
+        must return the (E_undirected,) mask in the graph's link order."""
+        t = self._require_t(t)
+        if self.link_mask_fn is not None:
+            return jnp.asarray(self.link_mask_fn(t)).astype(dtype)
+        return network_lib.sparse_link_keep(self._link_key, t, n_undirected,
+                                            self.link_drop, dtype)
+
 
 def _local_rows(full: jnp.ndarray, n_local: int, axis: str) -> jnp.ndarray:
     """This shard's contiguous row block of a replicated (N, ...) array."""
     row0 = jax.lax.axis_index(axis) * n_local
     return jax.lax.dynamic_slice_in_dim(full, row0, n_local, axis=0)
+
+
+def _segment_sum(x: jnp.ndarray, graph) -> jnp.ndarray:
+    """sum over directed edges into each receiver — the sparse neighbour
+    reduce.  Edges are receiver-sorted by `SparseGraph` construction."""
+    return jax.ops.segment_sum(x, graph.receivers,
+                               num_segments=graph.n_nodes,
+                               indices_are_sorted=True)
+
+
+def _sparse_combine(sw, varphi: jnp.ndarray,
+                    keep_und: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Eq. 27b in edge-list form: phi_i <- w_self_i varphi_i
+    + sum_{e: recv(e)=i} w_e varphi_send(e), via one `segment_sum` over
+    the directed edges — O(E P) compute, O(N P + E) memory, never an
+    (N, N) matrix.
+
+    `keep_und` gates the undirected links of a time-varying network: the
+    surviving weights renormalise per receiver (for Eq. 47 weights that
+    IS Eq. 47 on the surviving graph — the dense `_effective_weights`
+    semantics), and a fully isolated node (no live links AND zero
+    self-weight) keeps its own iterate (`RingDiffusion._gated`
+    semantics).
+    """
+    g = sw.graph
+    w_e = sw.w_edge.astype(varphi.dtype)
+    w_s = sw.w_self.astype(varphi.dtype)
+    msg = varphi[g.senders]                        # (E, P)
+    if keep_und is None:
+        return w_s[:, None] * varphi + _segment_sum(w_e[:, None] * msg, g)
+    w_e = w_e * keep_und[g.edge_id].astype(varphi.dtype)
+    num = w_s[:, None] * varphi + _segment_sum(w_e[:, None] * msg, g)
+    den = w_s + _segment_sum(w_e, g)
+    isolated = den <= 0.0
+    safe = jnp.where(isolated, jnp.ones_like(den), den)
+    return jnp.where(isolated[:, None], varphi, num / safe[:, None])
 
 
 # ---------------------------------------------------------------------------
@@ -378,6 +432,16 @@ class Diffusion(_CombineTopology):
     the surviving graph — uniform over the still-reachable neighbourhood),
     so the combine stays row-stochastic over whatever links are up.
 
+    `weights` is EITHER the dense (N, N) row-stochastic matrix (the
+    paper-scale oracle) OR a `network.SparseWeights` edge-list bundle
+    (`sparse_nearest_neighbor_weights` / `sparse_metropolis_weights` over
+    a `SparseGraph`) — the latter runs the identical combine through
+    `segment_sum` without ever materialising an N x N array, which is
+    what carries the topology layer to 10k+ nodes
+    (docs/sparse-topologies.md; dense/sparse parity is pinned at <= 1e-9
+    in tests/test_sparse_topology.py).  In sparse mode a `link_mask_fn`
+    returns the (E_undirected,) per-link keep mask instead of (N, N).
+
     >>> import jax.numpy as jnp
     >>> W = jnp.asarray([[0.5, 0.5], [0.5, 0.5]])        # 2-node clique
     >>> Diffusion(W).combine(jnp.asarray([[0.0], [4.0]])).tolist()
@@ -387,14 +451,18 @@ class Diffusion(_CombineTopology):
     [[0.0], [4.0]]
     """
 
-    def __init__(self, weights: jnp.ndarray, *, link_drop: float = 0.0,
+    def __init__(self, weights, *, link_drop: float = 0.0,
                  link_seed: int = 0,
                  link_mask_fn: Optional[Callable] = None):
         self.weights = weights
+        self.sparse = isinstance(weights, network_lib.SparseWeights)
         self.links = _LinkSchedule(link_drop, link_seed, link_mask_fn)
 
     def shard_inputs(self) -> dict:
-        return {"weights": self.weights}
+        # sparse mode: the edge arrays are not per-node rows, so they ride
+        # into the shard_map body as replicated closure constants and the
+        # combine slices its local rows out of the gathered result
+        return {} if self.sparse else {"weights": self.weights}
 
     def _effective_weights(self, W_rows, t, *, axis):
         """Per-iteration weights: drop-masked, row-renormalised."""
@@ -412,6 +480,18 @@ class Diffusion(_CombineTopology):
         return W_eff / jnp.where(rows > 0, rows, jnp.ones_like(rows))
 
     def combine(self, varphi, *, axis=None, local=None, t=None):
+        if self.sparse:
+            sw = self.weights
+            keep = (self.links.keep_edges(t, sw.graph.n_undirected,
+                                          varphi.dtype)
+                    if self.links.time_varying else None)
+            if axis is None:
+                return _sparse_combine(sw, varphi, keep)
+            # every node must see the messages addressed to it; gather the
+            # node axis, run the full edge-list combine, keep local rows
+            varphi_all = jax.lax.all_gather(varphi, axis, tiled=True)
+            return _local_rows(_sparse_combine(sw, varphi_all, keep),
+                               varphi.shape[0], axis)
         if axis is None:
             W = self.weights
             if self.links.time_varying:
@@ -439,13 +519,38 @@ class RingDiffusion(_CombineTopology):
     >>> varphi = jnp.asarray([[4.0], [8.0], [12.0]])
     >>> RingDiffusion(w_self=0.5).combine(varphi).tolist()
     [[7.0], [8.0], [9.0]]
+
+    `graph=network.SparseGraph.ring(N)` switches the combine to the
+    edge-list `segment_sum` path (same math; parity-pinned).  Because
+    `SparseGraph.ring` orders link k as (k, k+1 mod N) — the coin order
+    of `ring_link_keep` — the sparse path replays the IDENTICAL link
+    failures for any `link_drop`/`link_seed` as the roll-based path.
     """
 
     def __init__(self, w_self: float = 1.0 / 3.0, *, link_drop: float = 0.0,
                  link_seed: int = 0,
-                 link_mask_fn: Optional[Callable] = None):
+                 link_mask_fn: Optional[Callable] = None,
+                 graph=None):
         self.w_self = w_self
         self.links = _LinkSchedule(link_drop, link_seed, link_mask_fn)
+        self.graph = graph
+        if graph is not None:
+            import numpy as np
+            ring = network_lib.SparseGraph.ring(graph.n_nodes)
+            for name in ("senders", "receivers", "edge_id"):
+                if not np.array_equal(np.asarray(getattr(graph, name)),
+                                      np.asarray(getattr(ring, name))):
+                    raise ValueError(
+                        "RingDiffusion(graph=) must be SparseGraph.ring(N) "
+                        "(link k = (k, k+1 mod N) — the ring_link_keep "
+                        "coin order)")
+
+    def _sparse_weights(self, dtype):
+        g = self.graph
+        w_n = (1.0 - self.w_self) / 2.0
+        return network_lib.SparseWeights(
+            g, jnp.full((2 * g.n_undirected,), w_n, dtype),
+            jnp.full((g.n_nodes,), self.w_self, dtype))
 
     def _gated(self, varphi, left, right, e_left, e_right):
         """Weighted combine over the surviving ring links only: dropped
@@ -462,6 +567,19 @@ class RingDiffusion(_CombineTopology):
         return jnp.where(isolated[:, None], varphi, num / safe[:, None])
 
     def combine(self, varphi, *, axis=None, local=None, t=None):
+        if self.graph is not None:
+            # edge-list path; a ring's (E_und,) link masks coincide with
+            # the (N,) ring_link_keep masks (same ordering), so both link
+            # forms drive it unchanged
+            sw = self._sparse_weights(varphi.dtype)
+            keep = (self.links.keep_edges(t, self.graph.n_undirected,
+                                          varphi.dtype)
+                    if self.links.time_varying else None)
+            if axis is None:
+                return _sparse_combine(sw, varphi, keep)
+            varphi_all = jax.lax.all_gather(varphi, axis, tiled=True)
+            return _local_rows(_sparse_combine(sw, varphi_all, keep),
+                               varphi.shape[0], axis)
         if axis is not None:
             if not self.links.time_varying:
                 return ring_combine_block(varphi, axis, self.w_self)
@@ -487,6 +605,143 @@ class RingDiffusion(_CombineTopology):
                            jnp.roll(varphi, 1, axis=0),
                            jnp.roll(varphi, -1, axis=0),
                            jnp.roll(e, 1), e)
+
+
+class PairwiseGossip(_CombineTopology):
+    """Asynchronous randomized gossip (Boyd-Ghosh-Prabhakar-Shah style) on
+    a `SparseGraph`: each iteration every undirected link activates
+    independently with probability `p_activate` — deterministic in
+    (`seed`, absolute t) via `network.sparse_link_keep`, so gossip runs
+    compose with the split/resume contract exactly like `link_drop` — and
+    each node averages with Eq. 47 weights over its ACTIVE neighbourhood:
+
+        phi_i <- (varphi_i + sum_{active links (i,j)} varphi_j)
+                 / (1 + |N_i^active(t)|)
+
+    A node with no active link this iteration keeps its own iterate (the
+    asynchronous-sensor semantics: nobody waits).  Two limits anchor it:
+    `p_activate=1.0` is EXACTLY dense `Diffusion` with
+    `nearest_neighbor_weights` on the same graph (parity-pinned), and
+    p ~ 1/E activates one expected link per iteration — classic pairwise
+    gossip, where the two endpoints exchange and average.
+
+    >>> import jax.numpy as jnp
+    >>> from repro.core import network
+    >>> g = network.SparseGraph.ring(3)
+    >>> all_on = PairwiseGossip(g, p_activate=1.0)
+    >>> all_on.combine(jnp.asarray([[3.0], [6.0], [9.0]]), t=0).tolist()
+    [[6.0], [6.0], [6.0]]
+    """
+
+    def __init__(self, graph, *, p_activate: float = 0.5, seed: int = 0):
+        if not 0.0 < p_activate <= 1.0:
+            raise ValueError(
+                f"p_activate must be in (0, 1]: {p_activate}")
+        if not isinstance(graph, network_lib.SparseGraph):
+            raise ValueError("PairwiseGossip needs a network.SparseGraph "
+                             "(use SparseGraph.from_dense for small "
+                             "adjacency matrices)")
+        self.graph = graph
+        self.p_activate = float(p_activate)
+        self.seed = int(seed)
+        self._key = jax.random.PRNGKey(seed)
+
+    def combine(self, varphi, *, axis=None, local=None, t=None):
+        if t is None:
+            raise ValueError(
+                "PairwiseGossip draws its activation from the iteration "
+                "index: call combine(..., t=<iteration>) (run_vb supplies "
+                "it automatically)")
+        g = self.graph
+        # keep prob = 1 - drop: active with probability p_activate
+        active = network_lib.sparse_link_keep(
+            self._key, t, g.n_undirected, 1.0 - self.p_activate,
+            varphi.dtype)
+        varphi_all = (varphi if axis is None
+                      else jax.lax.all_gather(varphi, axis, tiled=True))
+        act_dir = active[g.edge_id]
+        num = varphi_all + _segment_sum(
+            act_dir[:, None] * varphi_all[g.senders], g)
+        den = 1.0 + _segment_sum(act_dir, g)         # 1 + |N_i^active|
+        out = num / den[:, None]
+        return (out if axis is None
+                else _local_rows(out, varphi.shape[0], axis))
+
+
+class HierarchicalFusion(_CombineTopology):
+    """Two-level sensor -> gateway -> region fusion: each gateway
+    averages its sensors' iterates, each region averages its gateways'
+    means, and every sensor blends its own iterate with its gateway and
+    region means:
+
+        gw_g  = mean_{i: gateway(i)=g} varphi_i
+        rg_r  = mean_{g: region(g)=r} gw_g
+        phi_i <- w_self varphi_i + w_gateway gw_{gateway(i)}
+                 + (1 - w_self - w_gateway) rg_{region(gateway(i))}
+
+    Row-stochastic by construction, O(N + G + R) memory via two
+    `segment_sum`s — no N x N matrix, no peer-to-peer links.  Distinct
+    regions are independent consensus islands (they never exchange); a
+    single region with w_self = w_gateway = 0 degenerates to
+    `FusionCenter` exactly (parity-pinned).  Build balanced assignments
+    with `network.two_level_partition`.
+
+    >>> import jax.numpy as jnp
+    >>> from repro.core import network
+    >>> gw, rg = network.two_level_partition(4, 2, 1)
+    >>> h = HierarchicalFusion(gw, rg, w_self=0.0, w_gateway=0.0)
+    >>> h.combine(jnp.asarray([[0.0], [2.0], [4.0], [6.0]])).tolist()
+    [[3.0], [3.0], [3.0], [3.0]]
+    """
+
+    def __init__(self, gateway_of, region_of, *, w_self: float = 1.0 / 3.0,
+                 w_gateway: float = 1.0 / 3.0):
+        import numpy as np
+        gw = np.asarray(gateway_of, np.int32)
+        rg = np.asarray(region_of, np.int32)
+        if gw.ndim != 1 or rg.ndim != 1:
+            raise ValueError("gateway_of/region_of must be 1-D index maps")
+        n_gateways = int(rg.shape[0])
+        if gw.min(initial=0) < 0 or (gw.size and gw.max() >= n_gateways):
+            raise ValueError("gateway_of must index into region_of")
+        n_regions = int(rg.max()) + 1 if rg.size else 0
+        if rg.min(initial=0) < 0:
+            raise ValueError("region ids must be >= 0")
+        gw_count = np.bincount(gw, minlength=n_gateways)
+        rg_count = np.bincount(rg, minlength=n_regions)
+        if (gw_count == 0).any() or (rg_count == 0).any():
+            raise ValueError("every gateway needs >= 1 sensor and every "
+                             "region >= 1 gateway")
+        w_region = 1.0 - w_self - w_gateway
+        if w_self < 0 or w_gateway < 0 or w_region < -1e-12:
+            raise ValueError(
+                f"weights must be a convex combination: w_self={w_self}, "
+                f"w_gateway={w_gateway}, w_region={w_region}")
+        self.gateway_of = jnp.asarray(gw)
+        self.region_of = jnp.asarray(rg)
+        self.n_gateways = n_gateways
+        self.n_regions = n_regions
+        self._gw_count = jnp.asarray(gw_count, jnp.int32)
+        self._rg_count = jnp.asarray(rg_count, jnp.int32)
+        self.w_self = float(w_self)
+        self.w_gateway = float(w_gateway)
+        self.w_region = float(max(w_region, 0.0))
+
+    def combine(self, varphi, *, axis=None, local=None, t=None):
+        dt = varphi.dtype
+        full = (varphi if axis is None
+                else jax.lax.all_gather(varphi, axis, tiled=True))
+        gw_mean = jax.ops.segment_sum(
+            full, self.gateway_of, num_segments=self.n_gateways) \
+            / self._gw_count.astype(dt)[:, None]
+        rg_mean = jax.ops.segment_sum(
+            gw_mean, self.region_of, num_segments=self.n_regions) \
+            / self._rg_count.astype(dt)[:, None]
+        out = (self.w_self * full
+               + self.w_gateway * gw_mean[self.gateway_of]
+               + self.w_region * rg_mean[self.region_of[self.gateway_of]])
+        return (out if axis is None
+                else _local_rows(out, varphi.shape[0], axis))
 
 
 class ConsensusDiagnostics(NamedTuple):
@@ -601,7 +856,8 @@ class ADMMConsensus:
                  clip_tol: float = 1e-9, link_drop: float = 0.0,
                  link_seed: int = 0,
                  link_mask_fn: Optional[Callable] = None):
-        self.adj = adj
+        self.adj = adj                   # (N, N) dense or network.SparseGraph
+        self.sparse = isinstance(adj, network_lib.SparseGraph)
         self.links = _LinkSchedule(link_drop, link_seed, link_mask_fn)
         self.rho = rho
         self.xi = xi
@@ -630,7 +886,9 @@ class ADMMConsensus:
                     or self.dual_reset is not None)
 
     def shard_inputs(self) -> dict:
-        return {"adj": self.adj}
+        # sparse: edge arrays are not per-node rows — replicated closure
+        # constants; neigh_sum gathers, reduces, and keeps local rows
+        return {} if self.sparse else {"adj": self.adj}
 
     def init_carry(self, phi0: jnp.ndarray, model=None):
         lam0 = jnp.zeros_like(phi0)                   # duals lambda_i
@@ -686,15 +944,41 @@ class ADMMConsensus:
             return jnp.sqrt((sq @ onehot) / (jnp.sum(onehot, 0) * n))
         return jnp.sqrt(jnp.sum(sq) / (n * z.shape[1]))
 
-    def step(self, model, phi, carry, phi_star, t, schedule: Schedule, *,
-             axis=None, local=None, hyper=None):
-        # `hyper` entries (serving fleet axis, see `hyper_names`) override
-        # the static penalty/ramp constants; None — every solo path —
-        # reproduces the static behaviour exactly.  Under adaptive_rho the
-        # penalty lives in the carry (init_carry seeds it from self.rho),
-        # so only xi is liftable there.
-        rho = self.rho if not hyper or "rho" not in hyper else hyper["rho"]
-        xi = self.xi if not hyper or "xi" not in hyper else hyper["xi"]
+    def _graph_ops(self, phi, t, axis, local):
+        """(deg, neigh_sum, link_frac) for this iteration's graph: the
+        dense path masks + row-sums the (N, N) adjacency; the sparse path
+        gates the directed edge list and reduces with `segment_sum` —
+        per-iteration memory O(E + N), independent of N^2."""
+        if self.sparse:
+            g = self.adj
+            if self.links.time_varying:
+                # iteration-t links: one coin per undirected link, both
+                # directions gated together (the dense keep contract)
+                keep_und = self.links.keep_edges(t, g.n_undirected,
+                                                 phi.dtype)
+                keep_dir = keep_und[g.edge_id]
+                link_frac = jnp.mean(keep_und).astype(phi.dtype)
+                deg_full = _segment_sum(keep_dir, g)
+            else:
+                keep_dir = None
+                link_frac = jnp.ones((), phi.dtype)
+                deg_full = g.deg.astype(phi.dtype)
+            n_local_nodes = phi.shape[0]
+            deg = (deg_full if axis is None
+                   else _local_rows(deg_full, n_local_nodes, axis))
+
+            def neigh_sum(z):                        # sum_{j in N_i(t)} z_j
+                z_all = (z if axis is None
+                         else jax.lax.all_gather(z, axis, tiled=True))
+                msg = z_all[g.senders]
+                if keep_dir is not None:
+                    msg = msg * keep_dir[:, None]
+                s = _segment_sum(msg, g)
+                return (s if axis is None
+                        else _local_rows(s, n_local_nodes, axis))
+
+            return deg, neigh_sum, link_frac
+
         adj_rows = self.adj if axis is None else local["adj"]
         if self.links.time_varying:
             # iteration-t adjacency: the consensus constraints (and hence
@@ -716,6 +1000,19 @@ class ADMMConsensus:
             if axis is None:
                 return adj_rows @ z
             return adj_rows @ jax.lax.all_gather(z, axis, tiled=True)
+
+        return deg, neigh_sum, link_frac
+
+    def step(self, model, phi, carry, phi_star, t, schedule: Schedule, *,
+             axis=None, local=None, hyper=None):
+        # `hyper` entries (serving fleet axis, see `hyper_names`) override
+        # the static penalty/ramp constants; None — every solo path —
+        # reproduces the static behaviour exactly.  Under adaptive_rho the
+        # penalty lives in the carry (init_carry seeds it from self.rho),
+        # so only xi is liftable there.
+        rho = self.rho if not hyper or "rho" not in hyper else hyper["rho"]
+        xi = self.xi if not hyper or "xi" not in hyper else hyper["xi"]
+        deg, neigh_sum, link_frac = self._graph_ops(phi, t, axis, local)
 
         if self._plain:
             lam = carry

@@ -4,25 +4,71 @@ Graph generation is host-side numpy (it happens once, outside jit); the
 returned adjacency / weight matrices are plain jnp arrays consumed by the
 algorithms.  The paper's reference topology is a random geometric graph:
 50 nodes in a 3.5 x 3.5 square, communication radius 0.8, 144 edges.
+
+Two graph representations live here:
+
+* **dense** — an (N, N) 0/1 adjacency (and (N, N) weight matrices built
+  from it).  The paper's scale; stays the golden-parity oracle.
+* **sparse** — `SparseGraph`: directed edge lists + per-node degrees,
+  built by `random_geometric_edges` / `SparseGraph.ring` without ever
+  materialising an N x N array, consumed by the engine's
+  `segment_sum`-based combines (docs/sparse-topologies.md).  This is
+  what scales the network axis to 10k+ nodes.
 """
 from __future__ import annotations
+
+import math
+from typing import NamedTuple
 
 import numpy as np
 import jax
 import jax.numpy as jnp
 
 
-def random_geometric_graph(n_nodes: int, *, side: float | None = None,
-                           radius: float = 0.8, seed: int = 0,
-                           max_tries: int = 200):
-    """Connected random geometric graph.
+def connectivity_radius(n_nodes: int, side: float) -> float:
+    """The random-geometric-graph connectivity threshold
+    r_c = side * sqrt(ln n / (pi n)) (Penrose; Gupta-Kumar): below it the
+    graph is disconnected w.h.p., above it isolated nodes vanish as
+    n^(1 - (r/r_c)^2)."""
+    n = max(int(n_nodes), 2)
+    return side * math.sqrt(math.log(n) / (math.pi * n))
 
-    `side` defaults to the paper's density: 3.5 for N=50, scaled with
-    sqrt(N/50) otherwise (Sec. V-C2 keeps density constant by zooming the
-    square).  Returns (adjacency (N,N) float, positions (N,2)).
-    """
+
+def _resolve_radius(n_nodes: int, side: float,
+                    radius: float | None) -> float:
+    """Default communication radius: the paper's 0.8 (1.45x the threshold
+    at N=50, and constant-density via the sqrt(N/50) side scaling) — but
+    never below 1.3x the connectivity threshold, which the constant-0.8
+    rule crosses at N ~ 6k and which made the rejection-sampling loop
+    stall at N=10k.  1.3x leaves ~n^-0.69 expected isolated nodes, so a
+    connected sample lands in a couple of tries at any N.  An explicit
+    `radius` always wins."""
+    if radius is not None:
+        return float(radius)
+    return max(0.8, 1.3 * connectivity_radius(n_nodes, side))
+
+
+def _paper_side(n_nodes: int, side: float | None) -> float:
+    """3.5 for N=50, scaled with sqrt(N/50) otherwise (Sec. V-C2 keeps
+    density constant by zooming the square)."""
     if side is None:
-        side = 3.5 * float(np.sqrt(n_nodes / 50.0))
+        return 3.5 * float(np.sqrt(n_nodes / 50.0))
+    return float(side)
+
+
+def random_geometric_graph(n_nodes: int, *, side: float | None = None,
+                           radius: float | None = None, seed: int = 0,
+                           max_tries: int = 200):
+    """Connected random geometric graph (dense form).
+
+    `side` defaults to the paper's density (see `_paper_side`); `radius`
+    defaults to the paper's 0.8, floored at 1.3x the connectivity
+    threshold for large N (see `_resolve_radius` — every N <= ~128 call
+    is bit-identical to the historical constant-0.8 default).  Returns
+    (adjacency (N,N) float, positions (N,2)).
+    """
+    side = _paper_side(n_nodes, side)
+    radius = _resolve_radius(n_nodes, side, radius)
     rng = np.random.default_rng(seed)
     for _ in range(max_tries):
         pos = rng.uniform(0.0, side, size=(n_nodes, 2))
@@ -110,3 +156,235 @@ def algebraic_connectivity(adj: jnp.ndarray) -> float:
     lap = jnp.diag(degrees(adj)) - adj
     eig = jnp.linalg.eigvalsh(lap)
     return float(eig[1])
+
+
+# ---------------------------------------------------------------------------
+# Sparse representation: edge lists + per-node degrees, never an N x N array
+# ---------------------------------------------------------------------------
+class SparseGraph:
+    """Edge-list sensor graph for the engine's sparse combines.
+
+    Stores every undirected link twice as a DIRECTED message edge
+    (sender -> receiver), sorted by receiver so `jax.ops.segment_sum`
+    over `receivers` runs on sorted segments.  `edge_id` maps each
+    directed edge back to its undirected link, so both directions of a
+    link share one Bernoulli coin under `sparse_link_keep` / gossip
+    activation — the same one-coin-per-pair contract as the dense
+    `link_keep_matrix`.
+
+    Memory is O(E + N); nothing here (or in the combines consuming it)
+    ever materialises an (N, N) array.
+
+    >>> g = SparseGraph.ring(4)
+    >>> (g.n_nodes, g.n_undirected, int(g.senders.shape[0]))
+    (4, 4, 8)
+    >>> g.deg.tolist()                        # every ring node has 2 links
+    [2, 2, 2, 2]
+    """
+
+    __slots__ = ("senders", "receivers", "edge_id", "deg", "n_nodes",
+                 "n_undirected")
+
+    def __init__(self, senders, receivers, edge_id, deg, n_nodes: int,
+                 n_undirected: int):
+        self.senders = senders            # (E,) int32, E = 2 * n_undirected
+        self.receivers = receivers        # (E,) int32, sorted ascending
+        self.edge_id = edge_id            # (E,) int32 -> undirected link id
+        self.deg = deg                    # (N,) int32 neighbour counts
+        self.n_nodes = int(n_nodes)
+        self.n_undirected = int(n_undirected)
+
+    @classmethod
+    def from_undirected(cls, u, v, n_nodes: int) -> "SparseGraph":
+        """Build from undirected link lists: link k connects (u[k], v[k]).
+        The link ORDER is the coin order of `sparse_link_keep` — e.g.
+        `ring`'s link k = (k, k+1 mod N) matches `ring_link_keep`'s e[k]
+        exactly.  No self-loops or duplicate links."""
+        u = np.asarray(u, np.int64)
+        v = np.asarray(v, np.int64)
+        if u.shape != v.shape or u.ndim != 1:
+            raise ValueError("u/v must be equal-length 1-D link lists")
+        if np.any(u == v):
+            raise ValueError("self-loops are not links")
+        if np.any(u < 0) or np.any(v < 0) or np.any(u >= n_nodes) \
+                or np.any(v >= n_nodes):
+            raise ValueError(f"node ids must be in [0, {n_nodes})")
+        key = np.minimum(u, v) * n_nodes + np.maximum(u, v)
+        if np.unique(key).size != key.size:
+            raise ValueError("duplicate undirected links")
+        m = u.shape[0]
+        s = np.concatenate([u, v])
+        r = np.concatenate([v, u])
+        eid = np.concatenate([np.arange(m), np.arange(m)])
+        order = np.argsort(r, kind="stable")
+        deg = np.bincount(r, minlength=n_nodes)
+        return cls(jnp.asarray(s[order], jnp.int32),
+                   jnp.asarray(r[order], jnp.int32),
+                   jnp.asarray(eid[order], jnp.int32),
+                   jnp.asarray(deg, jnp.int32), n_nodes, m)
+
+    @classmethod
+    def from_dense(cls, adj) -> "SparseGraph":
+        """From a dense 0/1 adjacency (must be symmetric, zero diagonal)."""
+        a = np.asarray(adj)
+        if not np.array_equal(a, a.T):
+            raise ValueError("adjacency must be symmetric")
+        u, v = np.nonzero(np.triu(a, 1))
+        return cls.from_undirected(u, v, a.shape[0])
+
+    @classmethod
+    def ring(cls, n_nodes: int) -> "SparseGraph":
+        """Edge-list form of `ring_graph`: link k = (k, k+1 mod N), the
+        ordering under which `sparse_link_keep` draws the IDENTICAL
+        per-link coins as `ring_link_keep`."""
+        if n_nodes < 3:
+            raise ValueError(f"a ring needs >= 3 nodes: {n_nodes}")
+        i = np.arange(n_nodes)
+        return cls.from_undirected(i, (i + 1) % n_nodes, n_nodes)
+
+    def to_dense(self, dtype=np.float64) -> np.ndarray:
+        """(N, N) adjacency — the parity oracle's view of this graph.
+        Host-side numpy on purpose: the dense path is the small-N oracle,
+        and returning numpy keeps the default f64 exact under jax f32."""
+        a = np.zeros((self.n_nodes, self.n_nodes), dtype)
+        a[np.asarray(self.senders), np.asarray(self.receivers)] = 1.0
+        return a
+
+    def __repr__(self):
+        return (f"SparseGraph(n_nodes={self.n_nodes}, "
+                f"n_undirected={self.n_undirected})")
+
+
+class SparseWeights(NamedTuple):
+    """Combination weights over a `SparseGraph`: w_edge[e] weights the
+    directed message edge e (sender -> receiver) and w_self[i] weights
+    node i's own iterate — together one row-stochastic combine
+    phi_i <- w_self_i varphi_i + sum_e w_e varphi_send(e) without ever
+    forming the (N, N) matrix."""
+
+    graph: SparseGraph
+    w_edge: np.ndarray                # (E,) f64 host constants; cast to the
+    w_self: np.ndarray                # (N,) iterate dtype inside the combine
+
+
+def sparse_nearest_neighbor_weights(graph: SparseGraph) -> SparseWeights:
+    """Eq. 47 in edge-list form: receiver i takes 1/(|N_i|+1) from itself
+    and from each neighbour — exactly `nearest_neighbor_weights`' rows.
+
+    >>> g = SparseGraph.ring(3)
+    >>> sw = sparse_nearest_neighbor_weights(g)
+    >>> sw.w_self.tolist()
+    [0.3333333333333333, 0.3333333333333333, 0.3333333333333333]
+    """
+    # host-side numpy f64 on purpose: these are static per-run constants
+    # (closure-embedded under jit) and the combine casts them to the
+    # iterate dtype at use, so full precision survives x64 runs without
+    # depending on whether x64 was enabled at CONSTRUCTION time
+    inv = 1.0 / (np.asarray(graph.deg, np.float64) + 1.0)
+    return SparseWeights(graph, inv[np.asarray(graph.receivers)], inv)
+
+
+def sparse_metropolis_weights(graph: SparseGraph) -> SparseWeights:
+    """Metropolis-Hastings rule in edge-list form — symmetric doubly
+    stochastic, matching `metropolis_weights` entrywise."""
+    deg = np.asarray(graph.deg, np.float64)
+    s = np.asarray(graph.senders)
+    r = np.asarray(graph.receivers)
+    w_e = 1.0 / (1.0 + np.maximum(deg[s], deg[r]))
+    w_self = 1.0 - np.bincount(r, weights=w_e, minlength=graph.n_nodes)
+    return SparseWeights(graph, w_e, w_self)
+
+
+def sparse_link_keep(key, t, n_undirected: int, drop_prob: float,
+                     dtype=jnp.float32) -> jnp.ndarray:
+    """(E_undirected,) 0/1 keep mask for iteration t: undirected link k
+    survives with probability 1 - drop_prob; both directed edges of a
+    link read coin `edge_id[e]`, so a failed link is failed both ways.
+    Deterministic in (key, t), and — by the coin-order contract of
+    `SparseGraph.ring` — bit-identical to `ring_link_keep` on rings."""
+    kt = jax.random.fold_in(key, t)
+    return (jax.random.uniform(kt, (n_undirected,)) >= drop_prob) \
+        .astype(dtype)
+
+
+def random_geometric_edges(n_nodes: int, *, side: float | None = None,
+                           radius: float | None = None, seed: int = 0,
+                           max_tries: int = 200, chunk: int = 1024):
+    """Connected random geometric graph as a `SparseGraph` + positions —
+    the large-N constructor: distances are computed in (chunk, N) row
+    blocks and connectivity is checked by edge-list label propagation,
+    so nothing ever allocates an (N, N) array.
+
+    Same distribution as `random_geometric_graph` (same rng stream, same
+    default side/radius rules): at equal (n_nodes, side, radius, seed)
+    the first connected sample's edge set equals the dense adjacency's.
+    With the default threshold-derived radius a connected sample lands
+    in a handful of tries at any N (regression-tested at N=10k).
+    """
+    side = _paper_side(n_nodes, side)
+    radius = _resolve_radius(n_nodes, side, radius)
+    rng = np.random.default_rng(seed)
+    for _ in range(max_tries):
+        pos = rng.uniform(0.0, side, size=(n_nodes, 2))
+        u, v = _radius_edges(pos, radius, chunk=chunk)
+        if _edges_connected(u, v, n_nodes):
+            return SparseGraph.from_undirected(u, v, n_nodes), \
+                jnp.asarray(pos)
+    raise RuntimeError(
+        f"could not sample a connected geometric graph (N={n_nodes}, "
+        f"side={side}, radius={radius})")
+
+
+def _radius_edges(pos: np.ndarray, radius: float, *, chunk: int = 1024):
+    """Undirected links (u, v) with u < v and ||pos_u - pos_v|| <= radius,
+    via (chunk, N) distance blocks — O(N * chunk) peak memory."""
+    n = pos.shape[0]
+    us, vs = [], []
+    r2 = radius * radius
+    for lo in range(0, n, chunk):
+        hi = min(lo + chunk, n)
+        d2 = np.sum((pos[lo:hi, None, :] - pos[None, :, :]) ** 2, axis=-1)
+        bu, bv = np.nonzero(d2 <= r2)
+        bu = bu + lo
+        keep = bu < bv                   # upper triangle only, no loops
+        us.append(bu[keep])
+        vs.append(bv[keep])
+    return np.concatenate(us), np.concatenate(vs)
+
+
+def _edges_connected(u: np.ndarray, v: np.ndarray, n: int) -> bool:
+    """Connectivity from an undirected link list: vectorised min-label
+    propagation with pointer jumping — O(E) per sweep, ~diameter sweeps,
+    no adjacency matrix."""
+    if n <= 1:
+        return True
+    if u.size == 0:
+        return False
+    lbl = np.arange(n)
+    for _ in range(n):
+        new = lbl.copy()
+        np.minimum.at(new, u, lbl[v])
+        np.minimum.at(new, v, lbl[u])
+        new = new[new]                   # pointer jumping
+        if np.array_equal(new, lbl):
+            break
+        lbl = new
+    return bool((lbl == 0).all())
+
+
+def two_level_partition(n_nodes: int, n_gateways: int, n_regions: int):
+    """Balanced contiguous sensor -> gateway -> region assignment for
+    `engine.HierarchicalFusion`: (gateway_of (N,), region_of (G,)).
+
+    >>> g, r = two_level_partition(6, 3, 2)
+    >>> (g.tolist(), r.tolist())
+    ([0, 0, 1, 1, 2, 2], [0, 0, 1])
+    """
+    if not 1 <= n_regions <= n_gateways <= n_nodes:
+        raise ValueError(
+            f"need 1 <= regions ({n_regions}) <= gateways ({n_gateways}) "
+            f"<= nodes ({n_nodes})")
+    gateway_of = (np.arange(n_nodes) * n_gateways) // n_nodes
+    region_of = (np.arange(n_gateways) * n_regions) // n_gateways
+    return jnp.asarray(gateway_of, jnp.int32), \
+        jnp.asarray(region_of, jnp.int32)

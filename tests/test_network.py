@@ -1,4 +1,5 @@
 """Graph / combination-weight properties."""
+import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -8,6 +9,33 @@ hypothesis = pytest.importorskip(
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import network
+
+
+@st.composite
+def connected_graphs(draw, min_n=4, max_n=24):
+    """Arbitrary connected graph: random spanning tree + random extra
+    edges — far wider coverage than the geometric ensemble alone."""
+    n = draw(st.integers(min_n, max_n))
+    rng = np.random.default_rng(draw(st.integers(0, 2**31 - 1)))
+    adj = np.zeros((n, n))
+    for i in range(1, n):                      # spanning tree: connected
+        j = int(rng.integers(0, i))
+        adj[i, j] = adj[j, i] = 1.0
+    for _ in range(draw(st.integers(0, 2 * n))):
+        i, j = (int(v) for v in rng.integers(0, n, 2))
+        if i != j:
+            adj[i, j] = adj[j, i] = 1.0
+    return adj
+
+
+@st.composite
+def arbitrary_graphs(draw, min_n=4, max_n=20):
+    """Symmetric zero-diagonal graph, connected or not."""
+    n = draw(st.integers(min_n, max_n))
+    rng = np.random.default_rng(draw(st.integers(0, 2**31 - 1)))
+    p = draw(st.floats(0.0, 0.6))
+    u = np.triu(rng.random((n, n)) < p, 1).astype(float)
+    return u + u.T
 
 
 @settings(max_examples=10, deadline=None)
@@ -42,6 +70,60 @@ def test_metropolis_doubly_stochastic(n, seed):
     np.testing.assert_allclose(W.sum(1), 1.0, atol=1e-6)
 
 
+@settings(max_examples=25, deadline=None)
+@given(connected_graphs())
+def test_metropolis_arbitrary_connected(adj):
+    """Metropolis weights (Eq. 48) on ARBITRARY connected graphs — not
+    just the geometric ensemble: symmetric, doubly stochastic,
+    nonnegative, supported on N_i u {i} only."""
+    W = np.asarray(network.metropolis_weights(jnp.asarray(adj)))
+    np.testing.assert_allclose(W, W.T, atol=1e-6)
+    np.testing.assert_allclose(W.sum(0), 1.0, atol=1e-6)
+    np.testing.assert_allclose(W.sum(1), 1.0, atol=1e-6)
+    assert np.all(W >= 0)
+    mask = adj + np.eye(adj.shape[0])
+    assert np.all(W[mask == 0] == 0)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(2, 24), st.integers(0, 10_000), st.integers(0, 500),
+       st.floats(0.0, 1.0))
+def test_link_keep_matrix_symmetric_deterministic(n, seed, t, drop):
+    key = jax.random.PRNGKey(seed)
+    keep = np.asarray(network.link_keep_matrix(key, t, n, drop))
+    np.testing.assert_array_equal(keep, keep.T)       # one coin per pair
+    np.testing.assert_array_equal(np.diag(keep), 1.0)
+    assert set(np.unique(keep)) <= {0.0, 1.0}
+    again = np.asarray(network.link_keep_matrix(key, t, n, drop))
+    np.testing.assert_array_equal(keep, again)        # deterministic (key,t)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(3, 40), st.integers(0, 10_000), st.integers(0, 500),
+       st.floats(0.0, 1.0))
+def test_ring_link_keep_degree_bounds(n, seed, t, drop):
+    key = jax.random.PRNGKey(seed)
+    e = np.asarray(network.ring_link_keep(key, t, n, drop))
+    assert e.shape == (n,)
+    assert set(np.unique(e)) <= {0.0, 1.0}
+    # effective degree of ring node i is e[i-1] + e[i]: never above the
+    # nominal ring degree 2, never negative
+    deg = np.roll(e, 1) + e
+    assert np.all(deg <= 2) and np.all(deg >= 0)
+    np.testing.assert_array_equal(
+        e, np.asarray(network.ring_link_keep(key, t, n, drop)))
+
+
+@settings(max_examples=25, deadline=None)
+@given(arbitrary_graphs())
+def test_algebraic_connectivity_iff_connected(adj):
+    lam2 = network.algebraic_connectivity(jnp.asarray(adj))
+    if network._is_connected(adj):
+        assert lam2 > 1e-4
+    else:
+        assert abs(lam2) < 1e-4
+
+
 def test_ring_graph():
     adj = np.asarray(network.ring_graph(6))
     assert adj.sum() == 12
@@ -57,3 +139,83 @@ def test_consensus_contraction():
     for _ in range(400):
         x = W @ x
     assert np.abs(x - x.mean(0, keepdims=True)).max() < 1e-6
+
+
+# ---------------------------------------------------------------------------
+# Sparse representation properties
+# ---------------------------------------------------------------------------
+@settings(max_examples=25, deadline=None)
+@given(connected_graphs())
+def test_sparse_graph_round_trip(adj):
+    g = network.SparseGraph.from_dense(adj)
+    np.testing.assert_array_equal(np.asarray(g.to_dense()), adj)
+    n = adj.shape[0]
+    assert g.n_undirected == int(adj.sum()) // 2
+    assert g.senders.shape == g.receivers.shape == g.edge_id.shape
+    np.testing.assert_array_equal(np.asarray(g.deg), adj.sum(1))
+    # receiver-sorted (the segment_sum contract) and both directions of
+    # an undirected link share one edge_id
+    r = np.asarray(g.receivers)
+    assert np.all(r[:-1] <= r[1:])
+    ids = {}
+    for s, rr, e in zip(np.asarray(g.senders), r, np.asarray(g.edge_id)):
+        ids.setdefault(frozenset((int(s), int(rr))), set()).add(int(e))
+    assert all(len(v) == 1 for v in ids.values())
+    assert len(ids) == g.n_undirected
+
+
+@settings(max_examples=25, deadline=None)
+@given(connected_graphs())
+def test_sparse_weights_match_dense_rows(adj):
+    """sparse_{nearest_neighbor,metropolis}_weights scatter back to the
+    exact dense Eq. 47 / Eq. 48 matrices."""
+    g = network.SparseGraph.from_dense(adj)
+    for dense_fn, sparse_fn in [
+            (network.nearest_neighbor_weights,
+             network.sparse_nearest_neighbor_weights),
+            (network.metropolis_weights,
+             network.sparse_metropolis_weights)]:
+        W = np.asarray(dense_fn(jnp.asarray(adj)))
+        sw = sparse_fn(g)
+        dense = np.diag(np.asarray(sw.w_self, np.float64))
+        dense[np.asarray(sw.graph.senders),
+              np.asarray(sw.graph.receivers)] = 0.0
+        # scatter w_edge at (receiver, sender): row i holds node i's weights
+        dense[np.asarray(sw.graph.receivers),
+              np.asarray(sw.graph.senders)] = np.asarray(sw.w_edge)
+        np.testing.assert_allclose(dense, W, atol=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(3, 40), st.integers(0, 10_000), st.integers(0, 500),
+       st.floats(0.0, 1.0))
+def test_sparse_link_keep_matches_ring_coins(n, seed, t, drop):
+    """On a ring, sparse_link_keep IS ring_link_keep bit-for-bit: link k
+    of SparseGraph.ring is (k, k+1 mod N), the ring coin order."""
+    key = jax.random.PRNGKey(seed)
+    np.testing.assert_array_equal(
+        np.asarray(network.sparse_link_keep(key, t, n, drop)),
+        np.asarray(network.ring_link_keep(key, t, n, drop)))
+
+
+@settings(max_examples=25, deadline=None)
+@given(arbitrary_graphs())
+def test_edges_connected_matches_dense(adj):
+    u, v = np.nonzero(np.triu(adj, 1))
+    assert network._edges_connected(u, v, adj.shape[0]) == \
+        bool(network._is_connected(adj))
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 60), st.data())
+def test_two_level_partition_properties(n, data):
+    g = data.draw(st.integers(1, n))
+    r = data.draw(st.integers(1, g))
+    gateway_of, region_of = network.two_level_partition(n, g, r)
+    gw, rg = np.asarray(gateway_of), np.asarray(region_of)
+    assert gw.shape == (n,) and rg.shape == (g,)
+    # surjective and balanced at both levels (sizes differ by <= 1)
+    for ids, count in [(gw, g), (rg, r)]:
+        sizes = np.bincount(ids, minlength=count)
+        assert sizes.min() >= 1
+        assert sizes.max() - sizes.min() <= 1
