@@ -42,7 +42,8 @@ def main() -> None:
 
     from benchmarks import consensus_bench, gmm_backend_bench, kernel_bench, \
         linreg_bench, minibatch_bench, paper_figures, roofline, \
-        topology_scale_bench, vb_service_bench, weights_ablation
+        svrg_bench, topology_scale_bench, vb_service_bench, \
+        weights_ablation
     # (group, name, fn) — group is an --only alias for a family of benches
     benches = ([("paper_fig", f.__name__, f) for f in paper_figures.ALL]
                + [("weights_ablation", "weights_ablation",
@@ -52,6 +53,7 @@ def main() -> None:
                   ("kernel_bench", "kernel_bench", kernel_bench.run),
                   ("gmm_backend", "gmm_backend", gmm_backend_bench.run),
                   ("minibatch_vb", "minibatch_vb", minibatch_bench.run),
+                  ("svrg_vb", "svrg_vb", svrg_bench.run),
                   ("vb_service", "vb_service_throughput",
                    vb_service_bench.run),
                   ("vb_driver", "vb_driver_poisson",

@@ -89,6 +89,15 @@ class Backend(Protocol):
 
     name: str
 
+    def supports(self, model) -> bool:
+        """Capability check: can this backend run `model`'s hot path?
+
+        `engine.vb_init` consults this before binding a backend to a model
+        and falls back to the reference path (with a warning) when the
+        answer is no — selecting the fused kernel for a non-GMM model must
+        degrade gracefully, not crash inside the kernel."""
+        ...
+
     def local_vbm_optimum_nodes(self, x, mask, phi_nodes,
                                 prior: GMMPosterior, replication,
                                 K: int, D: int) -> jnp.ndarray:
@@ -101,6 +110,11 @@ class ReferenceBackend:
     """core/gmm.py as-is: three einsum passes over the data per iteration."""
 
     name: str = dataclasses.field(default="reference", init=False)
+
+    def supports(self, model) -> bool:
+        """The reference path IS the model's own `local_optimum` — every
+        conjugate-exponential adapter supports it by construction."""
+        return True
 
     def local_vbm_optimum_nodes(self, x, mask, phi_nodes, prior,
                                 replication, K, D):
@@ -151,6 +165,11 @@ class FusedBackend:
     block_t: int = 512
     precision: PrecisionPolicy = PrecisionPolicy()
     name: str = dataclasses.field(default="fused", init=False)
+
+    def supports(self, model) -> bool:
+        """The Pallas kernel implements exactly the GMM E-step; models tag
+        their hot-path family via a `kernel_family` class attribute."""
+        return getattr(model, "kernel_family", None) == "gmm"
 
     def local_vbm_optimum_nodes(self, x, mask, phi_nodes, prior,
                                 replication, K, D):

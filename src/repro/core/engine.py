@@ -1305,7 +1305,20 @@ def vb_init(model, data, topology, *, schedule: Schedule = Schedule(),
             raise ValueError(
                 f"{type(model).__name__} does not support compute-backend "
                 "selection (no with_backend method)")
-        model = with_backend(backend)
+        from repro.core import backends as backends_lib
+        resolved = backends_lib.resolve(backend)
+        supports = getattr(resolved, "supports", None)
+        if supports is not None and not supports(model):
+            # capability miss (e.g. the fused GMM kernel asked to run an
+            # HMM): degrade to the model's own reference path, loudly
+            import warnings
+            warnings.warn(
+                f"backend {resolved.name!r} does not support "
+                f"{type(model).__name__} (Backend.supports returned "
+                "False); falling back to the reference backend",
+                stacklevel=2)
+            resolved = backends_lib.ReferenceBackend()
+        model = with_backend(resolved)
     if not getattr(topology, "uses_schedule", True) \
             and schedule != Schedule():
         raise ValueError(
@@ -1330,11 +1343,25 @@ def vb_init(model, data, topology, *, schedule: Schedule = Schedule(),
             raise ValueError(
                 f"{type(model).__name__} does not support streaming "
                 "minibatches (no take_minibatch/data_mask methods)")
+        if minibatch.control_variate not in (None, "svrg"):
+            raise ValueError(
+                f"unknown control_variate "
+                f"{minibatch.control_variate!r}; expected None or 'svrg'")
         capacity = model.data_mask(data).shape[1]   # also validates shape
         if minibatch.batch_size > capacity:
             # covering the whole node = the bit-exact full-batch path
             minibatch = minibatch._replace(batch_size=int(capacity))
         stream0 = stream.init_state(n_nodes, minibatch.seed, int(capacity))
+        if minibatch.control_variate == "svrg" \
+                and minibatch.batch_size < capacity:
+            # SVRG anchors: snapshot iterate + its full-batch optimum,
+            # refreshed at epoch boundaries inside `_iteration`.  Inert
+            # (structurally absent) at full batch, where the minibatch
+            # path is already bit-exact with the full-batch run.
+            stream0 = stream0._replace(
+                anchor_phi=init_phi,
+                anchor_full=model.local_optimum(data, init_phi,
+                                                replication))
 
     diag0 = topology.init_diag(model, init_phi) if diagnostics else None
     session = VBSession(model, data, topology, schedule, replication,
@@ -1362,7 +1389,31 @@ def _iteration(model, data, base_mask, topology, schedule, replication,
         st_new, idx, mb_mask = stream.advance(st, base_mask, t,
                                               minibatch.batch_size)
         data_t = model.take_minibatch(data, idx, mb_mask)
-    phi_star = model.local_optimum(data_t, phi, replication)
+    if minibatch is not None and minibatch.control_variate == "svrg" \
+            and st.anchor_phi is not None:
+        # SVRG corrected estimator (data/stream.py module docstring):
+        #   phi*_svrg = phi*_B(phi_t) - phi*_B(anchor) + phi*_full(anchor)
+        # Exactly unbiased (statistics are linear in the scaled mask, so
+        # E_B[phi*_B(anchor)] = phi*_full(anchor)); the anchor refreshes at
+        # epoch boundaries with the CURRENT iterate, at which point the
+        # two minibatch terms cancel exactly and the step is the full-batch
+        # one.  Epoch parity with `advance` is automatic: both key on the
+        # same absolute-t epoch arithmetic.
+        def _refresh(_):
+            return phi, model.local_optimum(data, phi, replication)
+
+        def _keep(_):
+            return st.anchor_phi, st.anchor_full
+
+        anchor_phi, anchor_full = jax.lax.cond(
+            st_new.epoch != st.epoch, _refresh, _keep, None)
+        st_new = st_new._replace(anchor_phi=anchor_phi,
+                                 anchor_full=anchor_full)
+        phi_star = (model.local_optimum(data_t, phi, replication)
+                    - model.local_optimum(data_t, anchor_phi, replication)
+                    + anchor_full)
+    else:
+        phi_star = model.local_optimum(data_t, phi, replication)
     phi_new, carry_new, diag = topology.step(model, phi, carry, phi_star, t,
                                              schedule, axis=axis,
                                              local=local, hyper=hyper)
@@ -1550,7 +1601,10 @@ def run_vb(model, data, topology, *, n_iters: int,
         Deterministic per (seed, node, iteration):
         both executors and both compute backends see identical batches.
         `batch_size >= n_per_node` reproduces the full-batch run
-        bit-for-bit.
+        bit-for-bit.  `control_variate="svrg"` re-centres every
+        minibatch estimate on a full-batch anchor refreshed each epoch
+        (still exactly unbiased; anchors ride the resumable stream
+        state, and the full-batch degeneracy stays bit-exact).
     diagnostics : also record per-iteration consensus error
     metric_nodes : evaluate the Eq. 46 metric on only the first
         `metric_nodes` rows (kl_nodes becomes (T, metric_nodes)) — used by
@@ -1618,11 +1672,11 @@ def _run_vb_sharded(session: VBSession, n_iters, phi0, carry0, stream0, t0):
     # every shard returns the identical (replicated) value
     has_diag = diagnostics and getattr(topology, "emits_diagnostics", False)
 
-    # stream state: keys/permutation are per-node data, the epoch counter
-    # is replicated (epoch boundaries are global)
-    stream_specs = (stream.StreamState(
-        keys=PartitionSpec(axis), perm=PartitionSpec(axis),
-        epoch=PartitionSpec()) if has_stream else None)
+    # stream state: keys/permutation (and the SVRG anchors, when carried)
+    # are per-node data, the epoch counter is replicated (epoch boundaries
+    # are global) — stream.state_specs mirrors the state's None structure
+    stream_specs = (stream.state_specs(stream0, axis)
+                    if has_stream else None)
     in_specs, out_specs = sharding.vb_node_specs(
         data, axis=axis, has_carry=has_carry, n_local=len(local_keys),
         carry_specs=topology.carry_specs(axis) if has_carry else None,

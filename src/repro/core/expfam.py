@@ -112,6 +112,27 @@ def noninformative_prior(K: int, D: int, *, alpha0: float = 1.0,
     )
 
 
+class NWParams(NamedTuple):
+    """Hyperparameters of a bank of K Normal-Wishart factors — the GMM
+    posterior minus its Dirichlet part.  This is the hyper container of
+    `blocks.NormalWishartBlock`; every nw_* function in this module is
+    written against the (m, beta, W, nu) surface, so it accepts either an
+    `NWParams` or a full `GMMPosterior`."""
+
+    m: jnp.ndarray      # (K, D)
+    beta: jnp.ndarray   # (K,)
+    W: jnp.ndarray      # (K, D, D)
+    nu: jnp.ndarray     # (K,)
+
+    @property
+    def K(self) -> int:
+        return self.beta.shape[-1]
+
+    @property
+    def D(self) -> int:
+        return self.m.shape[-1]
+
+
 # ---------------------------------------------------------------------------
 # Natural parameters <-> hyperparameters  (Eq. 45 + Appendix B)
 # ---------------------------------------------------------------------------
@@ -141,9 +162,12 @@ def block_labels(K: int, D: int):
     return np.asarray([0] * K + per * K, np.int32)
 
 
-def pack_natural(q: GMMPosterior) -> jnp.ndarray:
-    """GMMPosterior -> flat natural-parameter message (Eq. 45)."""
-    K, D = q.K, q.D
+def nw_pack(q) -> jnp.ndarray:
+    """Normal-Wishart bank -> its flat natural-parameter segment: the
+    per-component [n1, n4, n3, vec(n2)] blocks of Eq. 45, flattened.
+    Accepts an `NWParams` or a `GMMPosterior` (only m/beta/W/nu are read).
+    """
+    K, D = q.beta.shape[-1], q.m.shape[-1]
     n1 = (q.nu - D) / 2.0                                            # (K,)
     n4 = -q.beta / 2.0                                               # (K,)
     n3 = q.beta[:, None] * q.m                                       # (K, D)
@@ -152,13 +176,12 @@ def pack_natural(q: GMMPosterior) -> jnp.ndarray:
     n2 = -0.5 * W_inv - 0.5 * q.beta[:, None, None] * mmT            # (K, D, D)
     blocks = jnp.concatenate(
         [n1[:, None], n4[:, None], n3, n2.reshape(K, D * D)], axis=-1)
-    return jnp.concatenate([q.alpha - 1.0, blocks.reshape(-1)])
+    return blocks.reshape(-1)
 
 
-def unpack_natural(phi: jnp.ndarray, K: int, D: int) -> GMMPosterior:
-    """Flat natural-parameter message -> GMMPosterior (inverse of pack)."""
-    alpha = phi[:K] + 1.0
-    blocks = phi[K:].reshape(K, 2 + D + D * D)
+def nw_unpack(seg: jnp.ndarray, K: int, D: int) -> NWParams:
+    """Flat Normal-Wishart segment -> NWParams (inverse of `nw_pack`)."""
+    blocks = seg.reshape(K, 2 + D + D * D)
     n1 = blocks[:, 0]
     n4 = blocks[:, 1]
     n3 = blocks[:, 2:2 + D]
@@ -169,21 +192,27 @@ def unpack_natural(phi: jnp.ndarray, K: int, D: int) -> GMMPosterior:
     mmT = m[:, :, None] * m[:, None, :]
     W_inv = -2.0 * n2 - beta[:, None, None] * mmT
     W = jnp.linalg.inv(W_inv)
-    return GMMPosterior(alpha=alpha, m=m, beta=beta, W=W, nu=nu)
+    return NWParams(m=m, beta=beta, W=W, nu=nu)
 
 
-def project_to_domain(phi: jnp.ndarray, K: int, D: int, *,
-                      min_alpha: float = 1e-3, min_beta: float = 1e-6,
-                      min_eig: float = 1e-8) -> jnp.ndarray:
-    """Euclidean projection of a natural-parameter point onto (the interior
-    of) the domain Omega (Eq. 38b).
+def pack_natural(q: GMMPosterior) -> jnp.ndarray:
+    """GMMPosterior -> flat natural-parameter message (Eq. 45)."""
+    return jnp.concatenate([q.alpha - 1.0, nw_pack(q)])
 
-    Omega requires alpha_k > 0, beta_k > 0, nu_k > D - 1 and W^{-1} > 0.
-    We clamp the scalar coordinates and project the W^{-1} block onto the
-    PSD cone by eigenvalue clipping -- the closest point in Frobenius norm.
-    """
-    alpha = jnp.maximum(phi[:K] + 1.0, min_alpha)
-    blocks = phi[K:].reshape(K, 2 + D + D * D)
+
+def unpack_natural(phi: jnp.ndarray, K: int, D: int) -> GMMPosterior:
+    """Flat natural-parameter message -> GMMPosterior (inverse of pack)."""
+    alpha = phi[:K] + 1.0
+    nw = nw_unpack(phi[K:], K, D)
+    return GMMPosterior(alpha=alpha, m=nw.m, beta=nw.beta, W=nw.W, nu=nw.nu)
+
+
+def nw_project(seg: jnp.ndarray, K: int, D: int, *,
+               min_beta: float = 1e-6, min_eig: float = 1e-8) -> jnp.ndarray:
+    """Projection of a flat Normal-Wishart segment onto its domain: clamps
+    beta and nu and projects the W^{-1} carrier onto the PSD cone by
+    eigenvalue clipping (the closest point in Frobenius norm)."""
+    blocks = seg.reshape(K, 2 + D + D * D)
     n1 = blocks[:, 0]
     n4 = jnp.minimum(blocks[:, 1], -min_beta / 2.0)   # beta >= min_beta
     n3 = blocks[:, 2:2 + D]
@@ -205,7 +234,24 @@ def project_to_domain(phi: jnp.ndarray, K: int, D: int, *,
     n2 = -0.5 * W_inv - 0.5 * beta[:, None, None] * mmT
     blocks = jnp.concatenate(
         [n1[:, None], n4[:, None], n3, n2.reshape(K, D * D)], axis=-1)
-    return jnp.concatenate([alpha - 1.0, blocks.reshape(-1)])
+    return blocks.reshape(-1)
+
+
+def project_to_domain(phi: jnp.ndarray, K: int, D: int, *,
+                      min_alpha: float = 1e-3, min_beta: float = 1e-6,
+                      min_eig: float = 1e-8) -> jnp.ndarray:
+    """Euclidean projection of a natural-parameter point onto (the interior
+    of) the domain Omega (Eq. 38b).
+
+    Omega requires alpha_k > 0, beta_k > 0, nu_k > D - 1 and W^{-1} > 0.
+    The Dirichlet and Normal-Wishart segments project independently (the
+    domain is a product set), so this is the concatenation of the two
+    per-family projections — exactly how `blocks.BlockModel` composes them.
+    """
+    alpha = jnp.maximum(phi[:K] + 1.0, min_alpha)
+    return jnp.concatenate([alpha - 1.0,
+                            nw_project(phi[K:], K, D, min_beta=min_beta,
+                                       min_eig=min_eig)])
 
 
 def in_domain(phi: jnp.ndarray, K: int, D: int) -> jnp.ndarray:
@@ -271,19 +317,25 @@ def gmm_log_partition(q: GMMPosterior) -> jnp.ndarray:
     return dirichlet_log_partition(q.alpha) + jnp.sum(nw_log_partition(q))
 
 
+def nw_expected_stats_flat(q) -> jnp.ndarray:
+    """E[u] of the Normal-Wishart bank laid out exactly like `nw_pack`:
+    per-component [E ln|L|, E mu'L mu, E L mu, vec(E L)], flattened."""
+    K, D = q.beta.shape[-1], q.m.shape[-1]
+    e_logdet, e_L, e_Lmu, e_quad = nw_expected_stats(q)
+    blocks = jnp.concatenate(
+        [e_logdet[:, None], e_quad[:, None], e_Lmu, e_L.reshape(K, D * D)],
+        axis=-1)
+    return blocks.reshape(-1)
+
+
 def expected_sufficient_stats(q: GMMPosterior) -> jnp.ndarray:
     """grad_phi A(phi) laid out exactly like the flat packing.
 
     By Eq. 10a this is E[u(z)]; verified against jax.grad of the packed
     log-partition in the test-suite (a strong invariant of the packing).
     """
-    K, D = q.K, q.D
     e_logpi = dirichlet_expected_log(q.alpha)                      # (K,)
-    e_logdet, e_L, e_Lmu, e_quad = nw_expected_stats(q)
-    blocks = jnp.concatenate(
-        [e_logdet[:, None], e_quad[:, None], e_Lmu, e_L.reshape(K, D * D)],
-        axis=-1)
-    return jnp.concatenate([e_logpi, blocks.reshape(-1)])
+    return jnp.concatenate([e_logpi, nw_expected_stats_flat(q)])
 
 
 # ---------------------------------------------------------------------------

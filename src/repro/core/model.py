@@ -8,17 +8,28 @@ projection onto the natural-parameter domain Omega (Eq. 38b) and (d) the KL
 metric d(phi, phi_hat) (Eq. 46).  `ConjugateExpModel` names exactly that
 surface; `engine.run_vb` is written against it and nothing else.
 
-Two instances ship:
+Since PR 9 every adapter is a `blocks.BlockModel`: the model declares its
+tuple of exponential-family blocks (core/blocks.py) and the hyper
+split/join, and pack/unpack/KL/projection/block-labels plus the streaming
+and serving data plumbing (pad_to_capacity / take_minibatch /
+append_node_data) are protocol-level defaults derived from the block list.
+An adapter only owns its `local_optimum`.  Two instances live here:
 
-* `GMMModel`   — the paper's Bayesian Gaussian mixture (Sec. IV + App. A),
-  wrapping core/gmm.py + core/expfam.py.  Mixture components carry no
-  canonical order, so the reference for the KL metric may be a stack of
-  component permutations (core/refperm.py); the engine takes the min.
+* `GMMModel`   — the paper's Bayesian Gaussian mixture (Sec. IV + App. A):
+  DirichletBlock(1 row) + NormalWishartBlock, wrapping core/gmm.py.
+  Mixture components carry no canonical order, so the reference for the KL
+  metric may be a stack of component permutations (core/refperm.py); the
+  engine takes the min.
 * `LinRegModel` — Bayesian linear regression with Normal-Gamma conjugacy
-  (core/linreg.py), the classic diffusion-LMS WSN task.  The model has no
-  local latent variables, so the VBE step is trivial and phi*_i is constant
-  across iterations: `local_optimum` accepts either raw node data
-  (X, y, mask) or a precomputed (N, P) phi* stack.
+  (core/linreg.py): a single NormalGammaBlock row, the classic
+  diffusion-LMS WSN task.  The model has no local latent variables, so the
+  VBE step is trivial and phi*_i is constant across iterations:
+  `local_optimum` accepts either raw node data (X, y, mask) or a
+  precomputed (N, P) phi* stack.
+
+The model zoo (`models/hmm.py` HMMModel, `models/ppca.py` PPCAModel)
+composes the same blocks into further members of the class — see
+docs/model-zoo.md.
 """
 from __future__ import annotations
 
@@ -27,8 +38,8 @@ from typing import Any, Protocol, runtime_checkable
 import jax
 import jax.numpy as jnp
 
-from repro.core import backends, expfam, gmm, linreg
-from repro.core.expfam import GMMPosterior
+from repro.core import backends, blocks, linreg
+from repro.core.expfam import GMMPosterior, NWParams
 from repro.core.linreg import NGPosterior
 
 
@@ -38,16 +49,18 @@ class ConjugateExpModel(Protocol):
 
     Any object with this surface runs under every topology and executor of
     `engine.run_vb` — that is the paper's contribution-1 generality claim
-    as an API.  Example (the shipped GMM instance):
+    as an API.  `blocks.BlockModel` provides default implementations of
+    everything except `local_optimum` from a tuple of exponential-family
+    blocks.  Example (the shipped GMM instance):
 
     >>> from repro.core import expfam, model
     >>> mdl = model.GMMModel(expfam.noninformative_prior(3, 2), K=3, D=2)
     >>> isinstance(mdl, model.ConjugateExpModel)
     True
     >>> mdl.flat_dim                      # P of the Eq. 45 message
-    33
+    27
     >>> mdl.init_phi().shape              # the prior, packed
-    (33,)
+    (27,)
     """
 
     @property
@@ -89,7 +102,7 @@ class ConjugateExpModel(Protocol):
     def block_labels(self) -> jnp.ndarray:
         """(P,) int32 block-type label per flat coordinate — the per-block
         view of phi used by the adaptive consensus layer (per-block dual
-        scaling / residual norms).  Labels index the family's BLOCK_NAMES.
+        scaling / residual norms).  Labels index the model's BLOCK_NAMES.
         """
         ...
 
@@ -133,7 +146,7 @@ class ConjugateExpModel(Protocol):
 # ---------------------------------------------------------------------------
 # Bayesian GMM (the paper's worked example)
 # ---------------------------------------------------------------------------
-class GMMModel:
+class GMMModel(blocks.BlockModel):
     """Dirichlet x Normal-Wishart mixture posterior in natural-param space.
 
     `backend` selects the compute implementation of the per-iteration hot
@@ -143,6 +156,10 @@ class GMMModel:
     `backends.FusedBackend(precision=PrecisionPolicy(data_dtype=bf16))`.
     """
 
+    #: capability tag consumed by `backends.Backend.supports`: the fused
+    #: Pallas kernel implements exactly the GMM E-step.
+    kernel_family = "gmm"
+
     def __init__(self, prior: GMMPosterior, K: int | None = None,
                  D: int | None = None,
                  backend: str | backends.Backend | None = None):
@@ -150,77 +167,31 @@ class GMMModel:
         self.K = K if K is not None else prior.K
         self.D = D if D is not None else prior.D
         self.backend = backends.resolve(backend)
+        self.blocks = (blocks.DirichletBlock(self.K),
+                       blocks.NormalWishartBlock(self.K, self.D))
 
     def with_backend(self, backend) -> "GMMModel":
         """Same model, different compute backend (used by run_vb(backend=))."""
         return GMMModel(self.prior, self.K, self.D, backend=backend)
 
-    @property
-    def flat_dim(self) -> int:
-        return expfam.flat_dim(self.K, self.D)
+    def split_hyper(self, q: GMMPosterior) -> tuple:
+        return (q.alpha[None], NWParams(m=q.m, beta=q.beta, W=q.W, nu=q.nu))
 
-    def pack(self, q: GMMPosterior) -> jnp.ndarray:
-        return expfam.pack_natural(q)
-
-    def unpack(self, phi: jnp.ndarray) -> GMMPosterior:
-        return expfam.unpack_natural(phi, self.K, self.D)
-
-    def init_phi(self) -> jnp.ndarray:
-        return expfam.pack_natural(self.prior)
+    def join_hyper(self, parts: tuple) -> GMMPosterior:
+        alpha, nw = parts
+        return GMMPosterior(alpha=alpha[0], m=nw.m, beta=nw.beta, W=nw.W,
+                            nu=nw.nu)
 
     def local_optimum(self, data, phi_nodes, replication):
         x, mask = data
         return self.backend.local_vbm_optimum_nodes(
             x, mask, phi_nodes, self.prior, replication, self.K, self.D)
 
-    def data_mask(self, data):
-        _, mask = data
-        return mask
-
-    def take_minibatch(self, data, idx, mb_mask):
-        x, _ = data
-        return jnp.take_along_axis(x, idx[:, :, None], axis=1), mb_mask
-
-    def append_node_data(self, data, node, points):
-        x, mask = data
-        points = jnp.asarray(points, x.dtype)
-        if points.ndim == 1:
-            points = points[None]
-        free = jnp.where(mask[node] <= 0)[0]            # host-side eager
-        if free.shape[0] < points.shape[0]:
-            raise ValueError(
-                f"node {node}: buffer full ({int(free.shape[0])} free "
-                f"slot(s), {int(points.shape[0])} new point(s))")
-        slots = free[:points.shape[0]]
-        return (x.at[node, slots].set(points),
-                mask.at[node, slots].set(jnp.ones((), mask.dtype)))
-
-    def pad_to_capacity(self, data, capacity):
-        x, mask = data
-        T = x.shape[1]
-        if capacity < T:
-            raise ValueError(
-                f"capacity {capacity} < current buffer size {T}")
-        if capacity == T:
-            return data
-        pad = capacity - T
-        return (jnp.pad(x, ((0, 0), (0, pad), (0, 0))),
-                jnp.pad(mask, ((0, 0), (0, pad))))
-
-    def project_to_domain(self, phi: jnp.ndarray) -> jnp.ndarray:
-        return expfam.project_to_domain(phi, self.K, self.D)
-
-    def kl(self, phi: jnp.ndarray, phi_ref: jnp.ndarray) -> jnp.ndarray:
-        return expfam.gmm_kl_flat(phi, phi_ref, self.K, self.D)
-
-    def block_labels(self) -> jnp.ndarray:
-        return expfam.block_labels(self.K, self.D)
-
 
 # ---------------------------------------------------------------------------
 # Bayesian linear regression (Normal-Gamma) — the generality instance
 # ---------------------------------------------------------------------------
-class LinRegModel:
+class LinRegModel(blocks.BlockModel):
     """y = w^T x + N(0, lambda^-1), lambda ~ Ga, w|lambda ~ N (conjugate)."""
 
     def __init__(self, prior: NGPosterior | None = None,
@@ -229,6 +200,7 @@ class LinRegModel:
             raise ValueError("LinRegModel needs a prior or a dimension D")
         self.prior = prior
         self.D = D if D is not None else prior.D
+        self.blocks = (blocks.NormalGammaBlock(self.D),)
 
     @classmethod
     def from_flat_dim(cls, P: int) -> "LinRegModel":
@@ -248,20 +220,11 @@ class LinRegModel:
                 "its VBE step is trivial (no per-iteration data pass)")
         return self
 
-    @property
-    def flat_dim(self) -> int:
-        return linreg.flat_dim(self.D)
+    def split_hyper(self, q: NGPosterior) -> tuple:
+        return (jax.tree_util.tree_map(lambda a: a[None], q),)
 
-    def pack(self, q: NGPosterior) -> jnp.ndarray:
-        return linreg.pack(q)
-
-    def unpack(self, phi: jnp.ndarray) -> NGPosterior:
-        return linreg.unpack(phi, self.D)
-
-    def init_phi(self) -> jnp.ndarray:
-        if self.prior is None:
-            raise ValueError("LinRegModel built without a prior")
-        return linreg.pack(self.prior)
+    def join_hyper(self, parts: tuple) -> NGPosterior:
+        return jax.tree_util.tree_map(lambda a: a[0], parts[0])
 
     def local_optimum(self, data, phi_nodes, replication):
         # No local latents: phi*_i does not depend on the current iterate.
@@ -274,18 +237,6 @@ class LinRegModel:
             lambda Xi, yi, mi: linreg.local_optimum(
                 Xi, yi, mi, self.prior, replication))(X, y, mask)
 
-    def project_to_domain(self, phi: jnp.ndarray) -> jnp.ndarray:
-        # Omega is handled implicitly: consensus averages of Normal-Gamma
-        # naturals stay in the domain (V-blocks are averages of PD
-        # matrices), matching the paper's linear-regression discussion.
-        return phi
-
-    def kl(self, phi: jnp.ndarray, phi_ref: jnp.ndarray) -> jnp.ndarray:
-        return linreg.kl(self.unpack(phi), self.unpack(phi_ref))
-
-    def block_labels(self) -> jnp.ndarray:
-        return linreg.block_labels(self.D)
-
     def _raw_data(self, data):
         if hasattr(data, "ndim") and data.ndim == 2 \
                 and data.shape[-1] == self.flat_dim:
@@ -295,13 +246,10 @@ class LinRegModel:
         return data
 
     def data_mask(self, data):
-        _, _, mask = self._raw_data(data)
-        return mask
+        return self._raw_data(data)[-1]
 
     def take_minibatch(self, data, idx, mb_mask):
-        X, y, _ = self._raw_data(data)
-        return (jnp.take_along_axis(X, idx[:, :, None], axis=1),
-                jnp.take_along_axis(y, idx, axis=1), mb_mask)
+        return super().take_minibatch(self._raw_data(data), idx, mb_mask)
 
     def append_node_data(self, data, node, points):
         """`points` is an (X_new (M, D), y_new (M,)) pair."""
@@ -311,25 +259,7 @@ class LinRegModel:
         y_new = jnp.asarray(y_new, y.dtype)
         if X_new.ndim == 1:
             X_new, y_new = X_new[None], jnp.atleast_1d(y_new)
-        free = jnp.where(mask[node] <= 0)[0]            # host-side eager
-        if free.shape[0] < X_new.shape[0]:
-            raise ValueError(
-                f"node {node}: buffer full ({int(free.shape[0])} free "
-                f"slot(s), {int(X_new.shape[0])} new point(s))")
-        slots = free[:X_new.shape[0]]
+        slots = self._free_slots(mask, node, X_new.shape[0])
         return (X.at[node, slots].set(X_new),
                 y.at[node, slots].set(y_new),
                 mask.at[node, slots].set(jnp.ones((), mask.dtype)))
-
-    def pad_to_capacity(self, data, capacity):
-        X, y, mask = self._raw_data(data)
-        T = X.shape[1]
-        if capacity < T:
-            raise ValueError(
-                f"capacity {capacity} < current buffer size {T}")
-        if capacity == T:
-            return data
-        pad = capacity - T
-        return (jnp.pad(X, ((0, 0), (0, pad), (0, 0))),
-                jnp.pad(y, ((0, 0), (0, pad))),
-                jnp.pad(mask, ((0, 0), (0, pad))))

@@ -55,6 +55,25 @@ the per-node sample capacity there is one window per epoch, the sorted
 window is the identity gather, and the T/T scale multiplies the mask by
 exactly 1.0 — so `MinibatchSpec(batch_size=n_per_node)` reproduces the
 full-batch run bit-for-bit on every estimator and executor.
+
+Variance reduction (`MinibatchSpec(control_variate="svrg")`): on top of
+reshuffling, `StreamState` can carry a full-batch ANCHOR — a snapshot
+iterate `anchor_phi` (N, P) and its full-batch local optimum `anchor_full`
+(N, P), refreshed once per epoch inside `engine._iteration`.  The engine
+then uses the SVRG-corrected estimator
+
+    phi*_svrg(t) = phi*_B(phi_t) - phi*_B(anchor_phi) + anchor_full
+
+where phi*_B(.) is the minibatch local optimum on iteration t's window.
+Both minibatch terms share the SAME window, so the correction is a classic
+control variate: E_B[phi*_B(anchor_phi)] = anchor_full exactly (statistics
+are linear in the scaled mask), hence the estimator stays exactly unbiased
+while the shared-window correlation cancels most of the sampling noise
+(Khan's information-geometry view: the natural-gradient step is linear in
+the local optimum, so variance reduction on phi* is variance reduction on
+the step).  The anchors ride in the engine's carried state — checkpoint /
+session-split safe — and the full-batch degeneracy above is untouched:
+with batch_size >= capacity the engine never materialises the correction.
 """
 from __future__ import annotations
 
@@ -72,10 +91,16 @@ class MinibatchSpec(NamedTuple):
         (N, Ni_max, D) array — the FLOPs saving is batch_size/Ni_max).
     seed : base seed of the deterministic per-(node, epoch) reshuffling
         stream.
+    control_variate : None (plain reshuffling) or "svrg" — carry a
+        full-batch anchor in `StreamState` and apply the SVRG-style
+        corrected estimator (module docstring); exactly unbiased, large
+        variance reduction at equal iteration count.  Inert when
+        batch_size >= the per-node capacity (full batch is noise-free).
     """
 
     batch_size: int
     seed: int = 0
+    control_variate: str | None = None
 
 
 def node_keys(n_nodes: int, seed: int) -> jnp.ndarray:
@@ -94,11 +119,18 @@ class StreamState(NamedTuple):
         node's sample slots.
     epoch : () int32 — the epoch `perm` belongs to (refreshed by `advance`
         when the absolute iteration crosses an epoch boundary).
+    anchor_phi : None, or (N, P) — the SVRG anchor iterate (the phi_nodes
+        snapshot taken at the last epoch boundary).  None unless
+        `MinibatchSpec(control_variate="svrg")` is active.
+    anchor_full : None, or (N, P) — the full-batch local optimum
+        phi*_full(anchor_phi), refreshed together with `anchor_phi`.
     """
 
     keys: jnp.ndarray
     perm: jnp.ndarray
     epoch: jnp.ndarray
+    anchor_phi: jnp.ndarray | None = None
+    anchor_full: jnp.ndarray | None = None
 
 
 def _epoch_perms(keys: jnp.ndarray, epoch: jnp.ndarray,
@@ -142,7 +174,20 @@ def advance(state: StreamState, base_mask: jnp.ndarray, t: jnp.ndarray,
     idx = jnp.sort(jnp.take(perm, pos, axis=1), axis=1).astype(jnp.int32)
     picked = jnp.take_along_axis(base_mask, idx, axis=1)  # 0 where padding
     scale = jnp.asarray(T / batch_size, base_mask.dtype)
-    return StreamState(state.keys, perm, epoch), idx, picked * scale
+    return state._replace(perm=perm, epoch=epoch), idx, picked * scale
+
+
+def state_specs(state: StreamState, axis: str) -> StreamState:
+    """Partition specs for a carried `StreamState` under a node-sharded
+    mesh: per-node leaves (keys, perm, and the SVRG anchors when present)
+    shard along `axis`, the scalar epoch replicates.  Mirrors the value
+    tree's None structure so the specs stay a valid shard_map prefix tree
+    whether or not the run carries anchors."""
+    from jax.sharding import PartitionSpec as P
+    return StreamState(
+        keys=P(axis), perm=P(axis), epoch=P(),
+        anchor_phi=None if state.anchor_phi is None else P(axis),
+        anchor_full=None if state.anchor_full is None else P(axis))
 
 
 def _select_one(key: jnp.ndarray, base_mask: jnp.ndarray, t: jnp.ndarray,

@@ -1,1 +1,3 @@
 from repro.models import model  # noqa: F401
+from repro.models.hmm import HMMModel, HMMPosterior  # noqa: F401
+from repro.models.ppca import PPCAModel  # noqa: F401

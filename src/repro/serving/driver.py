@@ -442,9 +442,8 @@ class FleetGroup:
             self.data, axis=axis, has_carry=has_carry,
             n_local=len(local_keys),
             carry_specs=topology.carry_specs(axis) if has_carry else None,
-            stream_specs=(stream_lib.StreamState(
-                keys=P(axis), perm=P(axis), epoch=P())
-                if has_stream else None))
+            stream_specs=(stream_lib.state_specs(self.stream, axis)
+                          if has_stream else None))
         data_b, phi_b, carry_b, stream_b = base_in[:4]
         local_specs = base_in[4:]
 

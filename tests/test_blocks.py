@@ -1,0 +1,280 @@
+"""Property suite for the composable exponential-family block layer.
+
+Four shipped block configurations (Dirichlet single-row, Dirichlet bank,
+Normal-Wishart bank, Normal-Gamma single-row + bank) must satisfy the
+`ExpFamBlock` contract: pack/unpack identity, KL >= 0 and = 0 at self,
+projection idempotence and domain landing, label partitions covering every
+flat coordinate, and consistency of the hand-tuned KLs with the generic
+exp-family identity (`blocks.default_kl`).  A composition section pins the
+refactor bit-invisibility: `GMMModel`/`LinRegModel` over blocks reproduce
+the legacy `expfam`/`linreg` monolith paths BIT-for-bit.
+
+Runs under hypothesis when available; otherwise the same properties run as
+seed-parametrised deterministic draws.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+from repro.core import blocks, expfam, linreg
+from repro.core import model as model_lib
+from repro.core.linreg import NGPosterior
+from repro.models import hmm as hmm_lib
+from repro.models import ppca as ppca_lib
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _x64():
+    jax.config.update("jax_enable_x64", True)
+    yield
+    jax.config.update("jax_enable_x64", False)
+
+
+def seeded(test):
+    """Hypothesis `@given(seed)` when available, else 8 fixed seeds."""
+    if HAVE_HYPOTHESIS:
+        return settings(max_examples=20, deadline=None)(
+            given(seed=st.integers(0, 10_000))(test))
+    return pytest.mark.parametrize("seed", range(8))(test)
+
+
+# ---------------------------------------------------------------------------
+# Random valid hypers per block configuration
+# ---------------------------------------------------------------------------
+def _dirichlet_hyper(rng, rows, K):
+    return jnp.asarray(rng.uniform(0.5, 30, (rows, K)))
+
+
+def _nw_hyper(rng, K, D):
+    A = rng.normal(size=(K, D, D)) * 0.3
+    return expfam.NWParams(
+        m=jnp.asarray(rng.normal(size=(K, D)) * 3),
+        beta=jnp.asarray(rng.uniform(0.5, 20, K)),
+        W=jnp.asarray(np.einsum("kij,klj->kil", A, A) + np.eye(D) * 0.5),
+        nu=jnp.asarray(rng.uniform(D + 1.0, D + 50, K)))
+
+
+def _ng_hyper(rng, rows, D):
+    A = rng.normal(size=(rows, D, D)) * 0.4
+    return NGPosterior(
+        m=jnp.asarray(rng.normal(size=(rows, D))),
+        V=jnp.asarray(np.einsum("rij,rlj->ril", A, A) + np.eye(D) * 0.3),
+        a=jnp.asarray(rng.uniform(0.5, 20, rows)),
+        b=jnp.asarray(rng.uniform(0.5, 20, rows)))
+
+
+#: (name, block, random-hyper draw) — the four shipped block types, with
+#: both single-row and bank configurations of the row-generic families.
+BLOCK_CASES = [
+    ("dirichlet", blocks.DirichletBlock(4),
+     lambda rng: _dirichlet_hyper(rng, 1, 4)),
+    ("dirichlet-bank", blocks.DirichletBlock(3, rows=3, name="trans"),
+     lambda rng: _dirichlet_hyper(rng, 3, 3)),
+    ("normal-wishart", blocks.NormalWishartBlock(3, 2),
+     lambda rng: _nw_hyper(rng, 3, 2)),
+    ("normal-gamma", blocks.NormalGammaBlock(3),
+     lambda rng: _ng_hyper(rng, 1, 3)),
+    ("normal-gamma-bank", blocks.NormalGammaBlock(2, rows=4),
+     lambda rng: _ng_hyper(rng, 4, 2)),
+]
+
+CASE_IDS = [c[0] for c in BLOCK_CASES]
+
+
+def _leaves(h):
+    return jax.tree_util.tree_leaves(h)
+
+
+@pytest.mark.parametrize("name,block,draw", BLOCK_CASES, ids=CASE_IDS)
+class TestBlockContract:
+
+    @seeded
+    def test_pack_unpack_identity(self, name, block, draw, seed):
+        h = draw(np.random.default_rng(seed))
+        x = block.pack(h)
+        assert x.shape == (block.dim,)
+        h2 = block.unpack(x)
+        for a, b in zip(_leaves(h), _leaves(h2)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-8, atol=1e-8)
+        np.testing.assert_allclose(np.asarray(block.pack(h2)),
+                                   np.asarray(x), rtol=1e-10, atol=1e-10)
+
+    @seeded
+    def test_kl_nonneg_and_zero_at_self(self, name, block, draw, seed):
+        rng = np.random.default_rng(seed)
+        x = block.pack(draw(rng))
+        y = block.pack(draw(rng))
+        assert abs(float(block.kl(x, x))) < 1e-6
+        assert float(block.kl(x, y)) > -1e-8
+
+    @seeded
+    def test_projection_idempotent_and_identity_in_domain(
+            self, name, block, draw, seed):
+        rng = np.random.default_rng(seed)
+        x = block.pack(draw(rng))
+        # in-domain points are (near-)fixed
+        np.testing.assert_allclose(np.asarray(block.project(x)),
+                                   np.asarray(x), rtol=1e-6, atol=1e-8)
+        # off-domain points land on a fixed point of the projection
+        x_off = x + jnp.asarray(rng.normal(size=x.shape)) * 0.3
+        p1 = block.project(x_off)
+        p2 = block.project(p1)
+        np.testing.assert_allclose(np.asarray(p2), np.asarray(p1),
+                                   rtol=1e-6, atol=1e-8)
+
+    @seeded
+    def test_kl_matches_expfam_identity(self, name, block, draw, seed):
+        """The hand-ordered KLs equal the generic default_kl — ties
+        pack/log_partition/expected_stats into one consistent family."""
+        rng = np.random.default_rng(seed)
+        x = block.pack(draw(rng))
+        y = block.pack(draw(rng))
+        np.testing.assert_allclose(
+            float(block.kl(x, y)),
+            float(blocks.default_kl(block, x, y)), rtol=1e-7, atol=1e-7)
+
+    @seeded
+    def test_expected_stats_is_grad_log_partition(
+            self, name, block, draw, seed):
+        """E[u] = grad_phi A(phi) on the flat coordinates — pins the
+        segment layout of every block type."""
+        h = draw(np.random.default_rng(seed))
+        x = block.pack(h)
+        gA = jax.grad(lambda p: block.log_partition(block.unpack(p)))(x)
+        np.testing.assert_allclose(np.asarray(gA),
+                                   np.asarray(block.expected_stats(h)),
+                                   rtol=1e-6, atol=1e-8)
+
+    def test_labels_partition_segment(self, name, block, draw):
+        lab = block.labels()
+        assert lab.shape == (block.dim,)
+        assert lab.dtype == np.int32
+        used = set(np.unique(lab).tolist())
+        assert used == set(range(len(block.label_names)))
+
+
+# ---------------------------------------------------------------------------
+# Model-level label partitions: every P coordinate covered, once
+# ---------------------------------------------------------------------------
+ZOO = {
+    "gmm": lambda: model_lib.GMMModel(
+        expfam.noninformative_prior(3, 2), K=3, D=2),
+    "linreg": lambda: model_lib.LinRegModel(linreg.prior(3)),
+    "hmm": lambda: hmm_lib.HMMModel(hmm_lib.noninformative_prior(3, 2)),
+    "ppca": lambda: ppca_lib.PPCAModel(ppca_lib.prior(4, 2)),
+}
+
+
+@pytest.mark.parametrize("name", sorted(ZOO))
+def test_zoo_conforms_to_protocol(name):
+    mdl = ZOO[name]()
+    assert isinstance(mdl, model_lib.ConjugateExpModel)
+    assert isinstance(mdl, blocks.BlockModel)
+    assert mdl.flat_dim == sum(b.dim for b in mdl.blocks)
+    # pack/unpack through split_hyper/join_hyper round-trips the prior
+    phi = mdl.init_phi()
+    np.testing.assert_array_equal(np.asarray(mdl.pack(mdl.unpack(phi))),
+                                  np.asarray(phi))
+
+
+@pytest.mark.parametrize("name", sorted(ZOO))
+def test_block_labels_cover_flat_dim(name):
+    mdl = ZOO[name]()
+    lab = np.asarray(mdl.block_labels())
+    assert lab.shape == (mdl.flat_dim,)
+    assert set(np.unique(lab).tolist()) == set(range(len(mdl.BLOCK_NAMES)))
+    # labels are a partition by construction: every coordinate has exactly
+    # one label, and segment offsets make model labels the concatenation
+    # of per-block labels
+    off, base = 0, 0
+    for b in mdl.blocks:
+        np.testing.assert_array_equal(
+            lab[off:off + b.dim], b.labels().astype(np.int32) + base)
+        off += b.dim
+        base += len(b.label_names)
+    assert off == mdl.flat_dim
+
+
+@pytest.mark.parametrize("name", sorted(ZOO))
+def test_model_kl_and_projection_compose(name):
+    mdl = ZOO[name]()
+    rng = np.random.default_rng(3)
+    phi = mdl.init_phi()
+    pert = phi + jnp.asarray(rng.normal(size=phi.shape)) * 0.05
+    proj = mdl.project_to_domain(pert)
+    assert abs(float(mdl.kl(phi, phi))) < 1e-8
+    assert np.isfinite(float(mdl.kl(proj, phi)))
+    np.testing.assert_allclose(np.asarray(mdl.project_to_domain(proj)),
+                               np.asarray(proj), rtol=1e-6, atol=1e-8)
+
+
+# ---------------------------------------------------------------------------
+# Refactor bit-invisibility: composed models == legacy monolith paths
+# ---------------------------------------------------------------------------
+def test_gmm_composition_bit_equal_legacy():
+    K, D = 3, 2
+    rng = np.random.default_rng(0)
+    q = expfam.GMMPosterior(alpha=_dirichlet_hyper(rng, 1, K)[0],
+                            **_nw_hyper(rng, K, D)._asdict())
+    mdl = model_lib.GMMModel(expfam.noninformative_prior(K, D), K=K, D=D)
+    phi = mdl.pack(q)
+    np.testing.assert_array_equal(np.asarray(phi),
+                                  np.asarray(expfam.pack_natural(q)))
+    pert = phi + jnp.asarray(rng.normal(size=phi.shape)) * 0.1
+    np.testing.assert_array_equal(
+        np.asarray(mdl.project_to_domain(pert)),
+        np.asarray(expfam.project_to_domain(pert, K, D)))
+    np.testing.assert_array_equal(
+        np.asarray(mdl.kl(mdl.project_to_domain(pert), phi)),
+        np.asarray(expfam.gmm_kl_flat(mdl.project_to_domain(pert), phi,
+                                      K, D)))
+    np.testing.assert_array_equal(np.asarray(mdl.block_labels()),
+                                  np.asarray(expfam.block_labels(K, D)))
+    assert mdl.BLOCK_NAMES == expfam.BLOCK_NAMES
+    q2 = mdl.unpack(phi)
+    assert isinstance(q2, expfam.GMMPosterior)
+    for a, b in zip(_leaves(q2), _leaves(expfam.unpack_natural(phi, K, D))):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_linreg_composition_bit_equal_legacy():
+    D = 3
+    rng = np.random.default_rng(1)
+    q0 = linreg.prior(D)
+    mdl = model_lib.LinRegModel(q0)
+    phi = mdl.init_phi()
+    np.testing.assert_array_equal(np.asarray(phi),
+                                  np.asarray(linreg.pack(q0)))
+    pert = phi + jnp.asarray(rng.normal(size=phi.shape)) * 0.05
+    np.testing.assert_array_equal(
+        np.asarray(mdl.kl(pert, phi)),
+        np.asarray(linreg.kl(linreg.unpack(pert, D),
+                             linreg.unpack(phi, D))))
+    np.testing.assert_array_equal(np.asarray(mdl.block_labels()),
+                                  np.asarray(linreg.block_labels(D)))
+    assert mdl.BLOCK_NAMES == linreg.BLOCK_NAMES
+    assert isinstance(mdl.unpack(phi), NGPosterior)
+
+
+def test_expfam_nw_helpers_roundtrip():
+    """The extracted nw_pack/nw_unpack pair is its own inverse and agrees
+    with the full GMM packing on the NW segment."""
+    K, D = 3, 2
+    q = _nw_hyper(np.random.default_rng(2), K, D)
+    seg = expfam.nw_pack(q)
+    assert seg.shape == (K * (2 + D + D * D),)
+    q2 = expfam.nw_unpack(seg, K, D)
+    for a, b in zip(_leaves(q), _leaves(q2)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-9, atol=1e-9)
+    full = expfam.pack_natural(expfam.GMMPosterior(
+        alpha=jnp.ones(K), **q._asdict()))
+    np.testing.assert_array_equal(np.asarray(full[K:]), np.asarray(seg))

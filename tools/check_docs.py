@@ -54,8 +54,14 @@ SYM_ALIASES = {
     "vb_service": "repro.serving.vb_service",
     "driver": "repro.serving.driver",
     "admission": "repro.serving.admission",
+    "blocks": "repro.core.blocks",
+    "hmm": "repro.models.hmm",
+    "ppca": "repro.models.ppca",
     "GMMModel": "repro.core.model.GMMModel",
     "LinRegModel": "repro.core.model.LinRegModel",
+    "HMMModel": "repro.models.hmm.HMMModel",
+    "PPCAModel": "repro.models.ppca.PPCAModel",
+    "Backend": "repro.core.backends.Backend",
     "ConsensusDiagnostics": "repro.core.engine.ConsensusDiagnostics",
     "MinibatchSpec": "repro.data.stream.MinibatchSpec",
     "StreamState": "repro.data.stream.StreamState",
