@@ -85,9 +85,11 @@ from typing import Any, Callable, NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
+from repro import telemetry
 from repro.core import network as network_lib
 from repro.data import stream
 from repro.dist import compat
+from repro.telemetry import taps
 
 
 # ---------------------------------------------------------------------------
@@ -1310,9 +1312,16 @@ def vb_init(model, data, topology, *, schedule: Schedule = Schedule(),
         supports = getattr(resolved, "supports", None)
         if supports is not None and not supports(model):
             # capability miss (e.g. the fused GMM kernel asked to run an
-            # HMM): degrade to the model's own reference path, loudly
-            import warnings
-            warnings.warn(
+            # HMM): degrade to the model's own reference path — loudly,
+            # but only once per (backend, model) pair per session: a
+            # serving fleet re-opens sessions constantly and a warning
+            # per vb_init is log spam.  The counter keeps every
+            # occurrence observable.
+            telemetry.inc("backend_fallback_total",
+                          backend=resolved.name,
+                          model=type(model).__name__)
+            telemetry.warn_once(
+                f"backend-fallback:{resolved.name}:{type(model).__name__}",
                 f"backend {resolved.name!r} does not support "
                 f"{type(model).__name__} (Backend.supports returned "
                 "False); falling back to the reference backend",
@@ -1407,6 +1416,11 @@ def _iteration(model, data, base_mask, topology, schedule, replication,
 
         anchor_phi, anchor_full = jax.lax.cond(
             st_new.epoch != st.epoch, _refresh, _keep, None)
+        if taps.enabled() and axis is None:
+            # 1 on the iterations that refreshed the SVRG anchor
+            # (trace-time gated; see telemetry/taps.py)
+            taps.tap("stream/svrg_anchor_refresh",
+                     (st_new.epoch != st.epoch).astype(jnp.int32), t=t)
         st_new = st_new._replace(anchor_phi=anchor_phi,
                                  anchor_full=anchor_full)
         phi_star = (model.local_optimum(data_t, phi, replication)
@@ -1512,6 +1526,20 @@ def _scan_steps(model, data, topology, schedule, replication, ref_phi,
         else:
             msd = jnp.zeros((), phi_new.dtype)
             diag = None
+        if taps.enabled() and axis is None:
+            # opt-in device taps (telemetry/taps.py): stream the
+            # per-iteration series out mid-flight via io_callback.  Trace
+            # -time gated — with taps off this block leaves the jaxpr
+            # byte-identical (pinned in tests/test_telemetry.py).  Not
+            # supported under the mesh executor (axis is not None).
+            taps.tap("vb/kl_mean", jnp.mean(kl), t=t)
+            taps.tap("vb/consensus_msd", msd, t=t)
+            if diag is not None and hasattr(diag, "rho"):
+                taps.tap("vb/admm_rho", jnp.mean(diag.rho), t=t)
+                taps.tap("vb/admm_primal_resid",
+                         jnp.mean(diag.primal_resid), t=t)
+                taps.tap("vb/admm_dual_resid",
+                         jnp.mean(diag.dual_resid), t=t)
         return (phi_new, aux_new, st_new), (kl, msd, diag)
 
     ts = jnp.arange(n_iters)
@@ -1536,6 +1564,11 @@ def vb_run(state: VBState, n_iters: int) -> tuple[VBState, VBRun]:
     if ses is None:
         raise ValueError("VBState has no session attached — create states "
                          "with vb_init(...)")
+    with telemetry.span("engine/vb_run", n_iters=int(n_iters)):
+        return _vb_run_body(state, ses, n_iters)
+
+
+def _vb_run_body(state, ses, n_iters):
     if ses.executor is None:
         phi, aux, st, kls, msds, diags = _scan_steps(
             ses.model, ses.data, ses.topology, ses.schedule,
@@ -1545,6 +1578,24 @@ def vb_run(state: VBState, n_iters: int) -> tuple[VBState, VBRun]:
     else:
         phi, aux, st, kls, msds, diags = _run_vb_sharded(
             ses, n_iters, state.phi, state.carry, state.stream, state.t)
+    if telemetry.enabled() and not isinstance(kls, jax.core.Tracer):
+        # the diag-slot tap path (telemetry/taps.py): file the scan's own
+        # per-iteration outputs as host series.  Reads arrays the run
+        # materializes anyway, so this never changes a jaxpr; skipped when
+        # vb_run is itself being traced (kls is a Tracer).
+        import numpy as np
+        ts = np.arange(int(state.t), int(state.t) + int(n_iters))
+        taps.record_series("vb_run/kl_mean", jnp.mean(kls, 1), ts=ts)
+        if ses.diagnostics:
+            taps.record_series("vb_run/consensus_msd", msds, ts=ts)
+        if diags is not None and hasattr(diags, "rho"):
+            flat = lambda a: (a if a.ndim == 1
+                              else a.reshape(a.shape[0], -1).mean(1))
+            taps.record_series("vb_run/admm_rho", flat(diags.rho), ts=ts)
+            taps.record_series("vb_run/admm_primal_resid",
+                               flat(diags.primal_resid), ts=ts)
+            taps.record_series("vb_run/admm_dual_resid",
+                               flat(diags.dual_resid), ts=ts)
     diag_last = (jax.tree_util.tree_map(lambda a: a[-1], diags)
                  if diags is not None else None)
     state_new = VBState(

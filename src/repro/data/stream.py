@@ -82,6 +82,8 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.telemetry import taps
+
 
 class MinibatchSpec(NamedTuple):
     """Per-node minibatch request for a streaming `run_vb` call.
@@ -170,6 +172,11 @@ def advance(state: StreamState, base_mask: jnp.ndarray, t: jnp.ndarray,
     perm = jax.lax.cond(epoch != state.epoch,
                         lambda: _epoch_perms(state.keys, epoch, T),
                         lambda: state.perm)
+    if taps.enabled():
+        # trace-time-gated device tap (telemetry/taps.py): epoch index per
+        # iteration — rollovers show as increments in the tapped series.
+        # No jaxpr change when taps are off.
+        taps.tap("stream/epoch", epoch, t=t)
     pos = (chunk * batch_size + jnp.arange(batch_size)) % T
     idx = jnp.sort(jnp.take(perm, pos, axis=1), axis=1).astype(jnp.int32)
     picked = jnp.take_along_axis(base_mask, idx, axis=1)  # 0 where padding

@@ -64,9 +64,22 @@ def main():
     ap.add_argument("--arrive-at", default="",
                     help="comma-separated slice boundaries at which each "
                          "session joins (cycled; empty = all at once)")
+    ap.add_argument("--trace", default=None, metavar="OUT.json",
+                    help="enable telemetry and dump a Chrome trace "
+                         "(chrome://tracing / Perfetto) of the run — "
+                         "driver slices, compiles, checkpoint writes, "
+                         "admission/eviction markers — at drain")
+    ap.add_argument("--metrics", default=None, metavar="OUT.prom",
+                    help="enable telemetry and dump the metrics "
+                         "snapshot (Prometheus text format) at drain")
     args = ap.parse_args()
 
     import numpy as np
+
+    from repro import telemetry
+
+    if args.trace or args.metrics:
+        telemetry.enable()
 
     from repro.core import engine, expfam, network
     from repro.core import model as model_lib
@@ -167,6 +180,17 @@ def main():
               f"{b.slots} slot(s), occupancy {b.occupancy:.2f}, "
               f"data padding {b.data_pad_frac:.2f}")
     print(f"served {args.sessions} session(s) in {n_slices} slice(s)")
+
+    if args.trace:
+        telemetry.export_chrome_trace(args.trace)
+        names = ", ".join(telemetry.tracer().span_names())
+        print(f"telemetry: wrote {len(telemetry.tracer())} trace events "
+              f"to {args.trace} ({names})")
+    if args.metrics:
+        with open(args.metrics, "w") as f:
+            f.write(telemetry.to_prometheus())
+        print(f"telemetry: wrote {len(telemetry.registry())} metric "
+              f"series to {args.metrics}")
 
 
 if __name__ == "__main__":

@@ -31,6 +31,8 @@ import hashlib
 import jax
 import numpy as np
 
+from repro import telemetry
+
 # Arrays at or under this many bytes are signed by content digest in
 # `static_signature`; larger ones fall back to identity (conservative:
 # splits groups, never wrongly merges them — and never pays an O(size)
@@ -59,6 +61,10 @@ def bucket_capacity(n: int, *, growth: float = 2.0,
     while cap < n:
         # max(+1) keeps the ladder strictly increasing for tiny growth
         cap = max(cap + 1, int(-(-cap * growth // 1)))
+    # bucket-decision observability: which rungs admissions land on, and
+    # how many padded slots each decision costs (docs/observability.md)
+    telemetry.inc("admission_bucket_total", rung=cap)
+    telemetry.inc("admission_padded_slots_total", value=cap - n)
     return cap
 
 

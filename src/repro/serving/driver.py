@@ -57,6 +57,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import telemetry
 from repro.checkpoint import ckpt
 from repro.core import engine
 from repro.data import stream as stream_lib
@@ -164,6 +165,7 @@ class DriverStats(NamedTuple):
     padding_waste: float  # 1 - occupancy: fraction of stepped slots masked
     checkpoints: int     # background checkpoint writes completed
     buckets: tuple = ()  # per-group BucketStats breakdown (VB driver only)
+    checkpoint_errors: int = 0  # background checkpoint writes that raised
 
 
 class _PendingSave:
@@ -192,6 +194,7 @@ class CheckpointWriter:
         self._lock = threading.Lock()
         self._thread: Optional[threading.Thread] = None
         self.completed = 0
+        self.errors = 0     # failed writes (counted even when nobody waits)
 
     def submit(self, tree: Any, path: str) -> _PendingSave:
         pending = _PendingSave()
@@ -206,11 +209,25 @@ class CheckpointWriter:
     def _worker(self) -> None:
         while True:
             tree, path, pending = self._q.get()
+            t0 = time.perf_counter()
             try:
-                pending.path = ckpt.save(path, jax.device_get(tree))
+                with telemetry.span("driver/checkpoint",
+                                    file=os.path.basename(path)):
+                    pending.path = ckpt.save(path, jax.device_get(tree))
                 self.completed += 1
-            except BaseException as e:          # surfaced via pending.wait()
+                telemetry.inc("driver_checkpoints_total")
+                telemetry.observe("driver_checkpoint_write_seconds",
+                                  time.perf_counter() - t0)
+            except BaseException as e:
+                # Surfaced via pending.wait() when someone holds the
+                # future — but the driver's periodic autosaves never
+                # wait, so the error must ALSO land somewhere visible:
+                # the `errors` counter feeds DriverStats.checkpoint_errors
+                # and the telemetry counter.  Swallowing keeps the
+                # daemon thread (and the scheduler) alive.
                 pending.exc = e
+                self.errors += 1
+                telemetry.inc("driver_checkpoint_errors_total")
             finally:
                 pending._done.set()
                 self._q.task_done()
@@ -483,16 +500,30 @@ class FleetGroup:
     def step_slice(self, k: int) -> None:
         """Dispatch one k-iteration slice (async: returns immediately
         with futures; host work may overlap until fetch_flags syncs)."""
-        out = self._slice_fn(k)(self.data, self.phi, self.carry,
-                                self.stream, self.t, self.conv,
-                                self.budget, self.tol, self.delta,
-                                self.hyper)
+        first = k not in self._compiled
+        fn = self._slice_fn(k)
+        with telemetry.span("driver/slice", k=k, slots=self.capacity):
+            if first:
+                # the first dispatch of a (k, capacity) shape pays the
+                # trace+compile; nested so timelines separate compile
+                # cost from steady-state slice dispatch
+                with telemetry.span("driver/compile", k=k,
+                                    slots=self.capacity):
+                    out = fn(self.data, self.phi, self.carry,
+                             self.stream, self.t, self.conv, self.budget,
+                             self.tol, self.delta, self.hyper)
+            else:
+                out = fn(self.data, self.phi, self.carry, self.stream,
+                         self.t, self.conv, self.budget, self.tol,
+                         self.delta, self.hyper)
         (self.phi, self.carry, self.stream, self.t, self.conv,
          self.delta) = out
 
     def fetch_flags(self) -> None:
         """Sync the small per-slot flag vectors device -> host."""
-        t, conv, delta = jax.device_get((self.t, self.conv, self.delta))
+        with telemetry.span("driver/sync"):
+            t, conv, delta = jax.device_get((self.t, self.conv,
+                                             self.delta))
         self.host_t = np.asarray(t).astype(np.int64)
         self.host_conv = np.asarray(conv).astype(bool)
         self.host_delta = np.asarray(delta).astype(np.float64)
@@ -751,6 +782,8 @@ class VBDriver:
             self._where[rid] = (entry["key"], slot)
             self._n_admitted += 1
             group.n_admitted += 1
+            telemetry.inc("driver_admitted_total")
+            telemetry.instant("driver/admit", rid=rid, slot=slot)
             if bucket is not None:
                 group.pad_frac_sum += (bucket[1] - bucket[0]) / bucket[1]
 
@@ -791,6 +824,21 @@ class VBDriver:
                 g.fetch_flags()                     # device -> host sync
             self._evict_done()
             self._clock += 1
+            if telemetry.enabled():
+                # fleet health gauges at every slice boundary (one bool
+                # check when telemetry is off)
+                occ = (self._occ_active / self._occ_slots
+                       if self._occ_slots else 0.0)
+                telemetry.set_gauge("driver_queue_depth",
+                                    len(self._queued))
+                telemetry.set_gauge("driver_active", sum(
+                    g.active_count() for g in self._groups.values()))
+                telemetry.set_gauge("driver_capacity", sum(
+                    g.capacity for g in self._groups.values()))
+                telemetry.set_gauge("driver_occupancy", occ)
+                telemetry.set_gauge("driver_padding_waste",
+                                    (1.0 - occ) if self._occ_slots
+                                    else 0.0)
             return self._remaining_locked()
 
     def _evict_done(self) -> None:
@@ -803,6 +851,8 @@ class VBDriver:
                     record = group.evict(slot)
                     del self._where[rid]
                     self._n_evicted += 1
+                    telemetry.inc("driver_evicted_total")
+                    telemetry.instant("driver/evict", rid=rid, slot=slot)
                     self._retire(rid, dict(record=record, key=key,
                                            session=group.session))
 
@@ -921,7 +971,8 @@ class VBDriver:
                 capacity=capacity, occupancy=occ,
                 padding_waste=(1.0 - occ) if self._occ_slots else 0.0,
                 checkpoints=self._writer.completed,
-                buckets=self._bucket_stats())
+                buckets=self._bucket_stats(),
+                checkpoint_errors=self._writer.errors)
 
     # -- mid-flight control ops (apply at slice boundaries) ---------------
     def push_data(self, rid: str, node: int, points: Any) -> None:
@@ -1001,6 +1052,8 @@ class VBDriver:
                 "pushed points")
         rec["data"] = grown
         rec["conv"] = jnp.zeros((), bool)
+        telemetry.inc("driver_rebucket_total")
+        telemetry.instant("driver/rebucket", rid=rid, rung=rung)
         self._meta[rid]["bucket"] = (true_cap, rung)
         fin["session"] = engine.VBSession(
             model, grown, ses.topology, ses.schedule, ses.replication,
@@ -1088,6 +1141,8 @@ class VBDriver:
             return
         del self._finished[rid]
         self._meta[rid]["finished"] = None
+        telemetry.inc("driver_requeue_total")
+        telemetry.instant("driver/requeue", rid=rid)
         entry = dict(rid=rid, key=fin["key"], session=fin["session"],
                      record=rec)
         self._queued[rid] = entry

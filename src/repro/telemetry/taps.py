@@ -1,0 +1,150 @@
+"""Jit-safe device taps: per-iteration series out of compiled VB steps.
+
+Two complementary paths get device-side series to the host:
+
+1. **Diag-slot recording** (`record_series`, used by `core.engine.vb_run`):
+   the engine's scan already emits per-iteration ``(kl, msd, diag)``
+   outputs — the "diag slot".  When host telemetry is enabled, `vb_run`
+   files those materialized arrays here after the scan returns.  This
+   path NEVER changes a jaxpr (it reads outputs that exist anyway), so
+   it is on whenever `repro.telemetry` is enabled.
+
+2. **Device taps** (`tap`, opt-in via `taps.enable()`): an
+   ``io_callback(ordered=False)`` inserted *inside* the traced step so
+   values stream out at slice boundaries while the computation is still
+   in flight — useful for watching a long driver run live rather than
+   post-hoc.  Inserting a callback changes the jaxpr and forces a
+   recompile, so this switch is independent of the host-telemetry
+   switch and is OFF by default; the disabled path is a trace-time
+   Python bool check, so with taps off the emitted jaxpr is
+   byte-identical to an uninstrumented build (pinned by
+   ``tests/test_telemetry.py::test_tap_disabled_jaxpr_identical``).
+
+Tap callbacks are unordered: the runtime may invoke them out of
+iteration order (and once per batch element under ``vmap``), so each
+record carries its own iteration index `t` when the caller has one;
+`series()` sorts by `t` before returning.  Taps are supported on the
+single-array executor paths; under the mesh/shard_map executor the
+callback insertion is not supported and taps should stay disabled.
+
+The switch is read at TRACE time and JAX caches traces per (function
+object, input avals): a step function traced while taps were off will
+keep its untapped trace even if taps are enabled afterwards.  Enable
+taps before the first trace of the function you want to watch (in the
+driver: before the first `tick()`), or rebuild the jitted function.
+"""
+from __future__ import annotations
+
+import threading
+from contextlib import contextmanager
+
+import numpy as np
+
+_enabled = False
+_lock = threading.Lock()
+# name -> list of (t or None, np.ndarray) records, in arrival order
+_buffer: dict[str, list] = {}
+
+
+def enable() -> None:
+    """Turn on device-tap insertion for subsequently traced functions."""
+    global _enabled
+    _enabled = True
+
+
+def disable() -> None:
+    global _enabled
+    _enabled = False
+
+
+def enabled() -> bool:
+    return _enabled
+
+
+@contextmanager
+def enabled_scope():
+    """Enable taps for the duration of a with-block (tests, debugging)."""
+    global _enabled
+    prev = _enabled
+    _enabled = True
+    try:
+        yield
+    finally:
+        _enabled = prev
+
+
+def _sink(name: str, t, value) -> None:
+    # host side of the io_callback; also the direct entry point for
+    # record()/record_series().  np.asarray copies the device buffer so
+    # later donation/reuse cannot corrupt the record.
+    with _lock:
+        _buffer.setdefault(name, []).append(
+            (None if t is None else np.asarray(t), np.asarray(value)))
+
+
+def tap(name: str, value, t=None) -> None:
+    """Emit `value` (any array) from inside a traced function.
+
+    No-op — and no jaxpr change — when taps are disabled at trace time.
+    `t` is an optional iteration index used to order unordered arrivals.
+    """
+    if not _enabled:
+        return
+    from jax.experimental import io_callback
+    if t is None:
+        io_callback(lambda v: _sink(name, None, v), None, value,
+                    ordered=False)
+    else:
+        io_callback(lambda ti, v: _sink(name, ti, v), None, t, value,
+                    ordered=False)
+
+
+def record(name: str, value, t=None) -> None:
+    """Host-side single record (no callback; callable anywhere)."""
+    _sink(name, t, value)
+
+
+def record_series(name: str, values, ts=None) -> None:
+    """File a whole per-iteration series (the vb_run diag-slot path).
+
+    `values` is a (T, ...) array; `ts` an optional (T,) iteration-index
+    array (absolute t, so resumed runs interleave correctly).
+    """
+    values = np.asarray(values)
+    ts = None if ts is None else np.asarray(ts)
+    with _lock:
+        recs = _buffer.setdefault(name, [])
+        for i in range(values.shape[0]):
+            recs.append((None if ts is None else ts[i], values[i]))
+
+
+def series(name: str):
+    """Return (ts, values) numpy arrays for a tapped series.
+
+    `ts` is None when no record carried an index; otherwise records are
+    sorted by t (unordered callbacks may arrive out of order).  Raises
+    KeyError for unknown names (see `names()`).
+    """
+    with _lock:
+        recs = list(_buffer[name])
+    if recs and recs[0][0] is not None:
+        recs.sort(key=lambda r: int(np.min(r[0])))
+        return (np.stack([r[0] for r in recs]),
+                np.stack([r[1] for r in recs]))
+    return None, np.stack([r[1] for r in recs]) if recs else np.empty((0,))
+
+
+def names() -> list[str]:
+    with _lock:
+        return sorted(_buffer)
+
+
+def counts() -> dict:
+    """{name: number of records} — cheap progress probe for live runs."""
+    with _lock:
+        return {k: len(v) for k, v in _buffer.items()}
+
+
+def clear() -> None:
+    with _lock:
+        _buffer.clear()

@@ -1,0 +1,222 @@
+"""Perf-regression gate over the committed bench trajectory.
+
+`benchmarks/run.py --json` emits `{name: {us_per_call, derived}}` rows;
+`BENCH_engine.json` at the repo root is the committed baseline that
+accumulates across PRs.  Until now nothing CHECKED those rows — a PR
+could silently double `vb_driver_poisson`'s per-slice cost or break the
+fused-backend speedup and CI would still be green.  This gate closes
+that loop; CI runs it against a fresh snapshot on every push
+(.github/workflows/ci.yml, plus a negative test that degrades a row and
+asserts the gate fails).
+
+Two kinds of checks, tuned for very different noise profiles:
+
+1. **Timing ratios** — `fresh.us_per_call <= baseline * max_ratio +
+   ABS_SLACK_US`.  CI machines differ wildly from the machine that
+   committed the baseline (container CPU vs laptop, thermal throttling,
+   noisy neighbors), so the default ratio is deliberately generous
+   (4.0x): it catches complexity-class regressions (an accidental
+   O(N^2) materialization, a lost jit cache causing per-tick retraces),
+   not 10% drifts.  Per-row overrides in `MAX_RATIO` tighten or loosen
+   individual rows; the absolute slack keeps sub-millisecond rows from
+   flapping on scheduler jitter.
+2. **Derived-metric rules** — machine-INDEPENDENT assertions parsed
+   from the `key=value` tokens each bench packs into its `derived`
+   string (speedups, KL ratios, compile counts, bit-exactness flags).
+   These are exact semantics, so the bounds are tight: e.g. the driver
+   must keep `compiles=1` and `speedup_vs_sync>=2`, SVRG must keep its
+   variance win, kernels must stay within oracle tolerance.  A rule is
+   skipped when its row is absent from the fresh snapshot (partial
+   `--only` runs) or its key does not parse — `--strict` turns those
+   skips into failures.
+
+Run `python tools/bench_gate.py` with no arguments to self-check the
+committed baseline (fresh defaults to baseline: ratios are 1.0 and the
+derived rules validate the committed values themselves).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# Absolute slack added to every timing bound: sub-millisecond rows can
+# double on scheduler jitter alone without meaning anything.
+ABS_SLACK_US = 500.0
+
+# Default and per-row fresh/baseline wall-time ratio ceilings.
+DEFAULT_MAX_RATIO = 4.0
+MAX_RATIO = {
+    # the telemetry acceptance row: disabled-by-default overhead must be
+    # unmeasurable, so this row gets no extra headroom beyond the
+    # cross-machine guard
+    "vb_driver_poisson": 4.0,
+    # interpret-mode Pallas kernels: python-loop dominated, very stable
+    "kernel_flash_attention": 3.0,
+    "kernel_ssd_scan": 3.0,
+    "kernel_gmm_estep": 3.0,
+    # large-N sparse rows are long enough to be timing-stable
+    "topology_scale_sparse_diffusion_n10000": 3.0,
+    "topology_scale_gossip_n10000": 3.0,
+    "topology_scale_hierarchical_n10000": 3.0,
+}
+
+# Machine-independent rules: name -> [(derived key, op, bound)].
+# ops: "<=", ">=", "==" (== compares bools/strings verbatim).
+DERIVED_RULES = {
+    "vb_driver_poisson": [("speedup_vs_sync", ">=", 2.0),
+                          ("compiles", "<=", 1)],
+    "vb_service_throughput": [("speedup_vs_sequential", ">=", 2.0)],
+    "vb_service_mixed": [("ratio_vs_same_shape", ">=", 0.5),
+                         ("groups", "<=", 1),
+                         ("compiles", "<=", 1)],
+    "svrg_vb": [("kl_ratio_equal_iters", "<=", 0.5),
+                ("degen_bitexact", "==", True)],
+    "minibatch_vb": [("kl_ratio_equal_flops", "<=", 0.5)],
+    "kernel_flash_attention": [("max_err_vs_oracle", "<=", 1e-4)],
+    "kernel_ssd_scan": [("max_err_vs_oracle", "<=", 1e-4)],
+    "kernel_gmm_estep": [("max_err_vs_oracle", "<=", 1e-4)],
+    "backend_speedup": [("max_rel_phi_err", "<=", 1e-5)],
+    "consensus_lm_training": [("resid_diff", "<=", 1e-6)],
+    "topology_scale_sparse_diffusion_n10000": [("no_nxn_hlo", "==", True)],
+    "topology_scale_gossip_n10000": [("no_nxn_hlo", "==", True)],
+    "topology_scale_hierarchical_n10000": [("no_nxn_hlo", "==", True)],
+}
+
+
+def parse_derived(derived: str) -> dict:
+    """`key=value` tokens of a bench row's derived string, typed.
+
+    >>> d = parse_derived("speedup_vs_sync=2.4x compiles=1 ok=True x y=")
+    >>> d["speedup_vs_sync"], d["compiles"], d["ok"]
+    (2.4, 1.0, True)
+    >>> "x" in d or "y" in d
+    False
+    """
+    out = {}
+    for tok in str(derived).split():
+        if "=" not in tok:
+            continue
+        key, _, val = tok.partition("=")
+        if not key or not val:
+            continue
+        if val in ("True", "False"):
+            out[key] = val == "True"
+            continue
+        if val.endswith("x"):
+            val = val[:-1]
+        try:
+            out[key] = float(val)
+        except ValueError:
+            out[key] = tok.partition("=")[2]        # keep the raw string
+    return out
+
+
+def _check_rule(value, op: str, bound):
+    if op == "<=":
+        return float(value) <= float(bound)
+    if op == ">=":
+        return float(value) >= float(bound)
+    if op == "==":
+        return value == bound
+    raise ValueError(f"unknown op {op!r}")
+
+
+def load(path: str) -> dict:
+    with open(path) as f:
+        return json.load(f)
+
+
+def gate(baseline: dict, fresh: dict, *, max_ratio: float,
+         only: tuple = (), strict: bool = False) -> tuple:
+    """Returns (failures, checks) — lists of human-readable lines.  An
+    empty failure list is a pass."""
+    failures, checks = [], []
+    base_rows = baseline.get("results", {})
+    fresh_rows = fresh.get("results", {})
+    if only:
+        fresh_rows = {n: r for n, r in fresh_rows.items()
+                      if n.startswith(only)}
+
+    for name in fresh.get("failed", []):
+        failures.append(f"{name}: bench FAILED in fresh snapshot")
+
+    for name, row in sorted(fresh_rows.items()):
+        us = float(row.get("us_per_call") or 0.0)
+        base = base_rows.get(name)
+        if base is not None and base.get("us_per_call"):
+            base_us = float(base["us_per_call"])
+            if base_us > 0 and us == us:            # NaN-safe
+                ratio = MAX_RATIO.get(name, max_ratio)
+                bound = base_us * ratio + ABS_SLACK_US
+                line = (f"{name}: {us:.1f}us vs baseline "
+                        f"{base_us:.1f}us (<= {ratio}x + "
+                        f"{ABS_SLACK_US:.0f}us)")
+                if us > bound:
+                    failures.append("TIMING " + line)
+                else:
+                    checks.append("timing  ok  " + line)
+        for key, op, ref in DERIVED_RULES.get(name, ()):
+            vals = parse_derived(row.get("derived", ""))
+            if key not in vals:
+                msg = f"{name}: derived key {key!r} missing"
+                (failures if strict else checks).append(
+                    ("MISSING " if strict else "derived skip ") + msg)
+                continue
+            line = f"{name}: {key}={vals[key]} ({op} {ref})"
+            if _check_rule(vals[key], op, ref):
+                checks.append("derived ok  " + line)
+            else:
+                failures.append("DERIVED " + line)
+    if not fresh_rows:
+        failures.append("no fresh rows matched — nothing was gated")
+    return failures, checks
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--baseline",
+                    default=os.path.join(_ROOT, "BENCH_engine.json"),
+                    help="committed snapshot (default: BENCH_engine.json)")
+    ap.add_argument("--fresh", default=None,
+                    help="fresh benchmarks/run.py --json output "
+                         "(default: the baseline itself — a self-check "
+                         "of the committed values)")
+    ap.add_argument("--max-ratio", type=float, default=DEFAULT_MAX_RATIO,
+                    help="default fresh/baseline wall-time ceiling "
+                         f"(default {DEFAULT_MAX_RATIO}; per-row "
+                         "overrides in MAX_RATIO)")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated row-name prefixes to gate")
+    ap.add_argument("--strict", action="store_true",
+                    help="fail when a DERIVED_RULES key is missing "
+                         "instead of skipping it")
+    ap.add_argument("--quiet", action="store_true",
+                    help="print failures only")
+    args = ap.parse_args(argv)
+
+    baseline = load(args.baseline)
+    fresh = load(args.fresh) if args.fresh else baseline
+    failures, checks = gate(
+        baseline, fresh, max_ratio=args.max_ratio,
+        only=tuple(args.only.split(",")) if args.only else (),
+        strict=args.strict)
+    if not args.quiet:
+        for line in checks:
+            print(line)
+    for line in failures:
+        print("FAIL " + line, file=sys.stderr)
+    n_rows = len(fresh.get("results", {}))
+    if failures:
+        print(f"bench gate: {len(failures)} failure(s) over {n_rows} "
+              f"rows", file=sys.stderr)
+        return 1
+    print(f"bench gate: PASS ({len(checks)} checks over {n_rows} rows)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
